@@ -1,0 +1,139 @@
+"""Shared TEBench-style harness (paper §5.1.3, inspired by NIXLBench).
+
+Issues repeated synchronous transfer requests from multiple submission
+"threads" (closed-loop actors on the virtual clock), with configurable block
+size, batch size, and thread count. Policies are swapped per run:
+  tent          TENT (telemetry-driven slice spraying)
+  round_robin   Mooncake TE (state-blind striping)
+  static_best2  NIXL/UCX (static best-K rails)
+  pinned        UCCL-P2P (one NIC per region)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import EngineConfig, FabricSpec, Location, MemoryKind, TentEngine
+
+
+def host_loc(node: int, numa: int = 0) -> Location:
+    return Location(node=node, kind=MemoryKind.HOST_DRAM, device=numa, numa=numa)
+
+
+def gpu_loc(spec: FabricSpec, node: int, gpu: int) -> Location:
+    return Location(node=node, kind=MemoryKind.DEVICE_HBM, device=gpu,
+                    numa=spec.node.gpu_numa(gpu))
+
+
+def make_engine(policy: str = "tent", *, spec: Optional[FabricSpec] = None,
+                seed: int = 0, **cfg_kw) -> TentEngine:
+    return TentEngine(
+        spec or FabricSpec(),
+        config=EngineConfig(policy=policy, **cfg_kw),
+        seed=seed,
+    )
+
+
+@dataclasses.dataclass
+class LoadResult:
+    latencies: np.ndarray  # per-request completion latency (s)
+    makespan: float
+    bytes_total: int
+
+    @property
+    def throughput(self) -> float:  # bytes/s
+        return self.bytes_total / max(self.makespan, 1e-12)
+
+    def pct(self, q: float) -> float:
+        return float(np.percentile(self.latencies, q))
+
+
+def closed_loop(
+    engine: TentEngine,
+    streams: Sequence[Tuple[int, int, int]],  # (src_seg, dst_seg, block_bytes)
+    *,
+    iters: int,
+    batch_size: int = 1,
+) -> LoadResult:
+    """Each stream is one submission thread: it keeps exactly one batch of
+    `batch_size` transfers in flight, resubmitting on completion, `iters`
+    times. Returns per-request latencies on the virtual clock."""
+    latencies: List[float] = []
+    done = {i: 0 for i in range(len(streams))}
+    t_start = engine.fabric.now
+    bytes_total = 0
+
+    def submit(i: int) -> None:
+        nonlocal bytes_total
+        src, dst, block = streams[i]
+        b = engine.allocate_batch()
+        t0 = engine.fabric.now
+        engine.submit_transfer(b, [(src, 0, dst, 0, block)] * batch_size)
+        bytes_total += block * batch_size
+
+        def on_done(res, i=i, t0=t0):
+            latencies.append(engine.fabric.now - t0)
+            done[i] += 1
+            if done[i] < iters:
+                submit(i)
+
+        engine.on_batch_done(b, on_done)
+
+    for i in range(len(streams)):
+        submit(i)
+    guard = 0
+    while any(d < iters for d in done.values()):
+        if not engine.fabric.step():
+            raise RuntimeError("fabric idle before load completed")
+        guard += 1
+        if guard > 60_000_000:
+            raise RuntimeError("bench event budget exceeded")
+    return LoadResult(
+        latencies=np.asarray(latencies),
+        makespan=engine.fabric.now - t_start,
+        bytes_total=bytes_total,
+    )
+
+
+def add_background_turbulence(engine: TentEngine, *, seed: int = 7,
+                              horizon: float = 60.0, severity: float = 0.5) -> None:
+    """Transient per-rail slowdowns (noisy neighbours / signal degradation,
+    paper §2.2): deterministic schedule of degradation windows on RDMA rails."""
+    rng = np.random.default_rng(seed)
+    for node in range(engine.topology.spec.n_nodes):
+        for nic in engine.topology.rdma_nics(node):
+            # windows cover t=0 onward so short virtual-time experiments see
+            # the same non-uniform fabric that long-running services do
+            t = 0.0
+            while t < horizon:
+                dur = float(rng.uniform(0.05, 0.5))
+                if rng.random() < 0.4:
+                    factor = float(rng.uniform(1 - severity, 0.9))
+                    engine.fabric.schedule_degradation(nic.link_id, at=t, until=t + dur, factor=factor)
+                t += dur + float(rng.uniform(0.0, 0.3))
+
+
+def add_tenant_contention(engine: TentEngine, *, streams: int = 4,
+                          block: int = 64 << 20, horizon: float = 1e12) -> None:
+    """Co-located tenants saturating the same rails (paper §2.2 "noisy
+    neighbours"): closed-loop host-to-host elephant flows that run for the
+    whole experiment, scheduled through the same engine/fabric."""
+    for i in range(streams):
+        numa = i % 2
+        src = engine.register_segment(host_loc(0, numa), block, materialize=False)
+        dst = engine.register_segment(host_loc(1, numa), block, materialize=False)
+
+        def pump(src=src, dst=dst):
+            if engine.fabric.now >= horizon:
+                return
+            b = engine.allocate_batch()
+            engine.submit_transfer(b, [(src.segment_id, 0, dst.segment_id, 0, block)])
+            engine.on_batch_done(b, lambda res: pump())
+
+        pump()
+
+
+def fmt_gbps(bps: float) -> str:
+    return f"{bps / 1e9:.2f}"

@@ -1,0 +1,54 @@
+"""Fig. 5: host-to-host read/write throughput and P99 latency, two nodes,
+eight 200 Gbps rails, per-socket memory + per-socket submission threads,
+block sizes 4 KB .. 64 MB. Baselines: Mooncake TE (round_robin),
+NIXL (static_best2), UCCL-P2P (pinned)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import add_background_turbulence, closed_loop, host_loc, make_engine
+
+BLOCKS = [4 * 1024, 64 * 1024, 1 << 20, 16 << 20, 64 << 20]
+POLICIES = [("tent", "TENT"), ("round_robin", "MooncakeTE"),
+            ("static_best2", "NIXL"), ("pinned", "UCCL")]
+
+
+def _one(policy: str, block: int):
+    eng = make_engine(policy, seed=9)
+    add_background_turbulence(eng, seed=11, severity=0.5)
+    streams = []
+    for sock in range(2):
+        src = eng.register_segment(host_loc(0, sock), block)
+        dst = eng.register_segment(host_loc(1, sock), block)
+        streams.append((src.segment_id, dst.segment_id, block))
+    iters = 24 if block >= (1 << 20) else 12
+    res = closed_loop(eng, streams, iters=iters)
+    return res
+
+
+def run() -> list:
+    out = []
+    tp = {}
+    p99 = {}
+    for policy, label in POLICIES:
+        for block in BLOCKS:
+            res = _one(policy, block)
+            tp[(label, block)] = res.throughput
+            p99[(label, block)] = res.pct(99)
+            out.append({
+                "name": f"fig5.{label}.block{block>>10}k",
+                "us_per_call": res.pct(50) * 1e6,
+                "derived": f"GBps={res.throughput/1e9:.2f};p99_us={res.pct(99)*1e6:.1f}",
+            })
+    big = BLOCKS[-1]
+    best_base_tp = max(tp[(l, big)] for _, l in POLICIES[1:])
+    best_base_p99 = min(p99[(l, big)] for _, l in POLICIES[1:])
+    out.append({
+        "name": "fig5.summary.64M",
+        "us_per_call": 0.0,
+        "derived": (
+            f"tent_tp_gain={tp[('TENT', big)]/best_base_tp:.3f};"
+            f"tent_p99_frac={p99[('TENT', big)]/best_base_p99:.3f}"
+        ),
+    })
+    return out

@@ -1,0 +1,48 @@
+"""Fig. 7: GPU-to-GPU read bandwidth vs submission-thread count (4 MB
+blocks, each thread bound to one local GPU). Paper: TENT saturates at ~16
+threads, >2x Mooncake TE, ~77% of hardware peak."""
+from __future__ import annotations
+
+from repro.core import FabricSpec
+
+from .common import closed_loop, gpu_loc, make_engine
+
+BLOCK = 4 << 20
+THREADS = [1, 2, 4, 8, 16, 32, 64]
+POLICIES = [("tent", "TENT"), ("pinned", "MooncakeTE"), ("static_best2", "NIXL")]
+
+
+def _one(policy: str, threads: int):
+    spec = FabricSpec()
+    eng = make_engine(policy, spec=spec, seed=1)
+    streams = []
+    for t in range(threads):
+        gpu = t % spec.node.n_gpus
+        src = eng.register_segment(gpu_loc(spec, 0, gpu), BLOCK)
+        dst = eng.register_segment(gpu_loc(spec, 1, gpu), BLOCK)
+        streams.append((src.segment_id, dst.segment_id, BLOCK))
+    return closed_loop(eng, streams, iters=12)
+
+
+def run() -> list:
+    peak = 8 * 25e9  # eight 200 Gbps rails
+    out = []
+    tp = {}
+    for policy, label in POLICIES:
+        for n in THREADS:
+            res = _one(policy, n)
+            tp[(label, n)] = res.throughput
+            out.append({
+                "name": f"fig7.{label}.threads{n}",
+                "us_per_call": res.pct(50) * 1e6,
+                "derived": f"GBps={res.throughput/1e9:.2f};pct_peak={res.throughput/peak*100:.1f}",
+            })
+    out.append({
+        "name": "fig7.summary.threads16",
+        "us_per_call": 0.0,
+        "derived": (
+            f"tent_vs_te={tp[('TENT',16)]/tp[('MooncakeTE',16)]:.2f};"
+            f"tent_pct_peak={tp[('TENT',16)]/peak*100:.1f}"
+        ),
+    })
+    return out

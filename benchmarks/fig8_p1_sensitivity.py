@@ -1,0 +1,48 @@
+"""Fig. 8: sensitivity to the tier-2 topology penalty P1 (the paper's name
+for the tier-2 entry of P_tier; we sweep it on the Fig. 6 GPU-to-GPU setup).
+
+Too large -> TENT degenerates to single-rail (tier-1 only); too small ->
+tier-2 rails are overused and their access cost inflates latency. The paper
+adopts P1 = 3; mis-setting should degrade only modestly because the EWMA
+feedback keeps pulling the scheduler back toward faster rails."""
+from __future__ import annotations
+
+from repro.core import FabricSpec
+
+from .common import closed_loop, gpu_loc, make_engine
+
+BLOCKS = [1 << 20, 4 << 20, 16 << 20, 64 << 20]
+P1S = [1.0, 2.0, 3.0, 6.0, 12.0, 1e9]
+
+
+def _one(p1: float, block: int):
+    spec = FabricSpec()
+    eng = make_engine("tent", spec=spec, seed=3,
+                      tier_penalty={1: 1.0, 2: p1, 3: float("inf")})
+    src = eng.register_segment(gpu_loc(spec, 0, 0), block)
+    dst = eng.register_segment(gpu_loc(spec, 1, 0), block)
+    return closed_loop(eng, [(src.segment_id, dst.segment_id, block)], iters=12)
+
+
+def run() -> list:
+    out = []
+    p99 = {}
+    for p1 in P1S:
+        for block in BLOCKS:
+            res = _one(p1, block)
+            p99[(p1, block)] = res.pct(99)
+            tag = "inf" if p1 > 1e6 else f"{p1:g}"
+            out.append({
+                "name": f"fig8.P1={tag}.block{block>>20}M",
+                "us_per_call": res.pct(99) * 1e6,
+                "derived": f"GBps={res.throughput/1e9:.2f}",
+            })
+    big = BLOCKS[-1]
+    best = min(P1S, key=lambda p: p99[(p, big)])
+    worst_frac = max(p99[(p, big)] for p in P1S if p <= 12) / p99[(best, big)]
+    out.append({
+        "name": "fig8.summary.64M",
+        "us_per_call": 0.0,
+        "derived": f"best_P1={'inf' if best > 1e6 else best};missetting_penalty={worst_frac:.2f}x",
+    })
+    return out

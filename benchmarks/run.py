@@ -1,0 +1,59 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: reproduces every TENT table/figure on the deterministic
+fabric simulator. Each module's run() returns rows; failures in one module
+do not mask the others."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (
+    fig2_per_rail,
+    fig5_host_to_host,
+    fig6_device_to_device,
+    fig7_thread_scaling,
+    fig8_p1_sensitivity,
+    fig9_batch_scaling,
+    fig10_failure_injection,
+    table2_hicache,
+    table3_checkpoint,
+    table4_portability,
+)
+
+MODULES = [
+    ("fig2_per_rail", fig2_per_rail),
+    ("fig5_host_to_host", fig5_host_to_host),
+    ("fig6_device_to_device", fig6_device_to_device),
+    ("fig7_thread_scaling", fig7_thread_scaling),
+    ("fig8_p1_sensitivity", fig8_p1_sensitivity),
+    ("fig9_batch_scaling", fig9_batch_scaling),
+    ("fig10_failure_injection", fig10_failure_injection),
+    ("table2_hicache", table2_hicache),
+    ("table3_checkpoint", table3_checkpoint),
+    ("table4_portability", table4_portability),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}.ERROR,0,failed")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
+        print(f"{name}.wall,{(time.time()-t0)*1e6:.0f},bench_wall_time", file=sys.stderr)
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

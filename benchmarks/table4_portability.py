@@ -1,0 +1,68 @@
+"""Table 4: peak read bandwidth across transfer modes vs theoretical limits.
+
+Applications issue the same BatchTransfer calls; only the fabric capability
+flags differ (thin-backend portability). Modes: multi-rail GPUDirect RDMA,
+staged GPU->Host / GPU->GPU (no GPUDirect), NVLink, MNNVL, Ascend UB,
+io_uring GPU->file, SHM, TCP."""
+from __future__ import annotations
+
+from repro.core import FabricSpec, Location, MemoryKind
+
+from .common import closed_loop, gpu_loc, host_loc, make_engine
+
+BLOCK = 256 << 20
+
+
+def _peak(policy_spec, src_loc, dst_loc, theoretical, label, iters=6):
+    spec, kw = policy_spec
+    eng = make_engine("tent", spec=spec, seed=8, **kw)
+    src = eng.register_segment(src_loc(spec, eng), BLOCK)
+    dst = eng.register_segment(dst_loc(spec, eng), BLOCK)
+    res = closed_loop(eng, [(src.segment_id, dst.segment_id, BLOCK)], iters=iters)
+    return {
+        "name": f"table4.{label}",
+        "us_per_call": res.pct(50) * 1e6,
+        "derived": (
+            f"GBps={res.throughput/1e9:.1f};theoretical={theoretical};"
+            f"efficiency={res.throughput/1e9/float(theoretical.split('/')[0]):.2f}"
+            if theoretical[0].isdigit() else f"GBps={res.throughput/1e9:.1f}"
+        ),
+    }
+
+
+def run() -> list:
+    rows = []
+    base = FabricSpec()
+    rows.append(_peak((base, {}),
+                      lambda s, e: gpu_loc(s, 0, 0), lambda s, e: gpu_loc(s, 1, 0),
+                      "100", "rdma_gpu_gpu"))  # 4 usable rails (tier1+2) x 25
+    nogd = FabricSpec(has_gpudirect=False)
+    rows.append(_peak((nogd, {}),
+                      lambda s, e: gpu_loc(s, 0, 0), lambda s, e: host_loc(1, 0),
+                      "27", "staged_gpu_host"))
+    rows.append(_peak((nogd, {}),
+                      lambda s, e: gpu_loc(s, 0, 0), lambda s, e: gpu_loc(s, 1, 0),
+                      "27", "staged_gpu_gpu"))
+    rows.append(_peak((base, {}),
+                      lambda s, e: gpu_loc(s, 0, 0), lambda s, e: gpu_loc(s, 0, 4),
+                      "204.5", "nvlink_gpu_gpu"))
+    mn = FabricSpec(has_mnnvl=True)
+    rows.append(_peak((mn, {}),
+                      lambda s, e: gpu_loc(s, 0, 0), lambda s, e: gpu_loc(s, 1, 0),
+                      "956.2", "mnnvl_gpu_gpu"))
+    ub = FabricSpec(has_ub=True, has_nvlink=False, has_gpudirect=False)
+    rows.append(_peak((ub, {}),
+                      lambda s, e: gpu_loc(s, 0, 0), lambda s, e: gpu_loc(s, 1, 0),
+                      "196.0", "ascend_ub_gpu_gpu"))
+    rows.append(_peak((base, {}),
+                      lambda s, e: gpu_loc(s, 0, 0),
+                      lambda s, e: Location(node=0, kind=MemoryKind.FILE),
+                      "6.0", "io_uring_gpu_file"))
+    rows.append(_peak((base, {}),
+                      lambda s, e: host_loc(0, 0), lambda s, e: host_loc(0, 1),
+                      "20.0", "shm_host_host"))
+    tcponly = FabricSpec(has_gpudirect=False, has_nvlink=False)
+    rows.append(_peak((tcponly, {}),
+                      lambda s, e: host_loc(0, 0), lambda s, e: host_loc(1, 0),
+                      "100", "rdma_host_host"))
+    return rows

@@ -1,0 +1,60 @@
+"""End-to-end driver: disaggregated LLM serving with TENT as the data plane.
+
+A real (smoke-scale) qwen2-family model prefils prompts on node 0, ships the
+decode cache across the simulated fabric through TENT (the PD-disaggregation
+elephant flow), and decodes on node 1. Output tokens are verified against
+monolithic generation; then the multi-tier HiCache is exercised with reuse.
+
+Run:  PYTHONPATH=src python examples/disaggregated_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import FabricSpec, TentEngine
+from repro.models import init_params
+from repro.serving import (
+    DisaggregatedServer,
+    HiCache,
+    kv_bytes_per_token,
+    make_cpu_pool,
+    make_disk_pool,
+    make_gpu_pool,
+    monolithic_generate,
+)
+
+cfg = get_smoke_config("qwen2-0.5b").with_(remat="none")
+params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+engine = TentEngine(FabricSpec())
+
+print("== prefill/decode disaggregation over TENT ==")
+server = DisaggregatedServer(engine, cfg, params, prefill_node=0, decode_node=1)
+prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab_size)
+res = server.generate(prompt, n_new=12, max_len=48)
+ref = monolithic_generate(cfg, params, prompt, n_new=12, max_len=48)
+np.testing.assert_array_equal(res.tokens, ref)
+print(f"generated {res.tokens.shape[1]} tokens x {res.tokens.shape[0]} seqs; "
+      f"KV flow {res.kv_bytes >> 10} KiB in {res.kv_transfer_seconds * 1e6:.0f} us (virtual)")
+print("decode == monolithic: OK")
+
+print("\n== multi-tier HiCache (GPU/CPU/disk) over TENT ==")
+page_tokens = 16
+pb = kv_bytes_per_token(cfg) * page_tokens
+hc = HiCache(
+    engine, cfg,
+    gpu_pool=make_gpu_pool(engine, 0, 0, page_bytes=pb, num_pages=4),
+    cpu_pool=make_cpu_pool(engine, 1, page_bytes=pb, num_pages=32),
+    disk_pool=make_disk_pool(engine, 1, page_bytes=pb, num_pages=64),
+    page_tokens=page_tokens,
+)
+convo_a = list(range(64))
+convo_b = list(range(1000, 1064))
+hc.insert(convo_a)
+hc.insert(convo_b)  # evicts convo_a pages down-tier (GPU pool holds 4 pages)
+print("tiers after two conversations:", hc.tier_counts())
+fetch = hc.fetch_prefix(convo_a)
+print(f"refetched convo A: {fetch.prefix_tokens} tokens, "
+      f"{fetch.promoted_pages} pages promoted in {fetch.transfer_seconds * 1e6:.0f} us, "
+      f"{fetch.bytes_moved >> 10} KiB moved")
+print("tiers after promotion:", hc.tier_counts())

@@ -1,0 +1,40 @@
+"""Quickstart: the TENT declarative transfer API in 40 lines.
+
+Builds a two-node H800-style fabric, registers segments, declares a batched
+transfer, and lets the engine spray slices across rails — then injects a NIC
+failure mid-flight and shows the data still arrives intact.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import FabricSpec, Location, MemoryKind, TentEngine
+
+engine = TentEngine(FabricSpec())  # 2 nodes x 8 GPUs x 8x200Gbps rails
+
+# 1. declare WHERE data lives (segments) — never WHICH wires to use
+src = engine.register_segment(
+    Location(node=0, kind=MemoryKind.HOST_DRAM, numa=0), 256 << 20, name="kv-src")
+dst = engine.register_segment(
+    Location(node=1, kind=MemoryKind.DEVICE_HBM, device=3, numa=0), 256 << 20, name="kv-dst")
+
+payload = np.random.default_rng(0).integers(0, 256, 256 << 20, dtype=np.uint8)
+src.write(0, payload)
+
+# 2. break a rail while the elephant flow is in flight
+nic = engine.topology.rdma_nic(0, 1)
+engine.fabric.schedule_failure(nic.link_id, at=0.0005, recover_at=0.5)
+
+# 3. declare intent; the engine plans routes, sprays slices, heals failures
+batch = engine.allocate_batch()
+engine.submit_transfer(batch, [(src.segment_id, 0, dst.segment_id, 0, 256 << 20)])
+result = engine.wait(batch)
+
+assert result.ok
+np.testing.assert_array_equal(dst.read(0, 256 << 20), payload)
+print(f"moved {result.bytes >> 20} MiB in {result.elapsed * 1e3:.2f} ms (virtual)")
+print(f"throughput: {result.throughput / 1e9:.1f} GB/s across "
+      f"{sum(1 for l in engine.fabric.links.values() if l.bytes_completed)} links")
+print(f"slices retried around the failed NIC: {engine.slices_retried}")
+print(f"rails excluded/readmitted: {engine.health.exclusions}/{engine.health.readmissions}")
+print("data integrity: OK")

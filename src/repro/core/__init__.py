@@ -1,0 +1,45 @@
+"""TENT core: declarative slice-spraying data-movement engine (the paper's
+primary contribution), plus the discrete-event fabric it executes on in this
+reproduction."""
+from .engine import BatchResult, EngineConfig, TentEngine
+from .fabric import Fabric
+from .plan import Orchestrator, RouteOption, Stage, TransportPlan
+from .resilience import HealthConfig, HealthMonitor
+from .scheduler import (
+    Candidate,
+    HashPolicy,
+    PinnedPolicy,
+    Policy,
+    RoundRobinPolicy,
+    StaticBest2Policy,
+    TentPolicy,
+    make_policy,
+    tent_choose_jnp,
+    tent_scores_jnp,
+)
+from .segments import Segment, SegmentManager, device_segment, file_segment, host_segment
+from .slicing import decompose
+from .telemetry import LinkTelemetry, TelemetryStore
+from .topology import DEFAULT_TIER_PENALTY, FabricSpec, LinkDesc, NodeSpec, Topology
+from .types import (
+    BatchState,
+    LinkClass,
+    Location,
+    MemoryKind,
+    Slice,
+    SliceState,
+    TentError,
+    TransferRequest,
+)
+
+__all__ = [
+    "BatchResult", "EngineConfig", "TentEngine", "Fabric", "Orchestrator",
+    "RouteOption", "Stage", "TransportPlan", "HealthConfig", "HealthMonitor",
+    "Candidate", "HashPolicy", "PinnedPolicy", "Policy", "RoundRobinPolicy",
+    "StaticBest2Policy", "TentPolicy", "make_policy", "tent_choose_jnp",
+    "tent_scores_jnp", "Segment", "SegmentManager", "device_segment",
+    "file_segment", "host_segment", "decompose", "LinkTelemetry",
+    "TelemetryStore", "DEFAULT_TIER_PENALTY", "FabricSpec", "LinkDesc",
+    "NodeSpec", "Topology", "BatchState", "LinkClass", "Location",
+    "MemoryKind", "Slice", "SliceState", "TentError", "TransferRequest",
+]

@@ -1,0 +1,426 @@
+"""TENT engine: declarative BatchTransfer API over the execution pipeline.
+
+Applications declare *what* moves (`allocate_batch` / `submit_transfer` /
+`wait`); the engine decides *how*: Phase 1 resolves a ranked transport plan
+(plan.py), Phase 2 sprays telemetry-scheduled slices across rails
+(scheduler.py), Phase 3 absorbs faults in the data plane (resilience.py).
+Completion is exposed through hierarchical counters: applications observe
+only "batch X has N slices remaining" (paper §4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .fabric import Fabric
+from .plan import Orchestrator, TransportPlan
+from .resilience import HealthConfig, HealthMonitor
+from .scheduler import Candidate, Policy, TentPolicy, make_policy
+from .segments import Segment, SegmentManager
+from .slicing import DEFAULT_MAX_SLICES, DEFAULT_SLICE_BYTES, decompose
+from .telemetry import TelemetryStore
+from .topology import DEFAULT_TIER_PENALTY, FabricSpec, Topology
+from .transports import WirePath, load_backends
+from .types import (
+    BatchState,
+    EXHAUSTED_RETRIES,
+    Location,
+    Slice,
+    SliceState,
+    TentError,
+    TransferRequest,
+    next_batch_id,
+    next_transfer_id,
+)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    policy: str = "tent"
+    slice_bytes: int = DEFAULT_SLICE_BYTES
+    max_slices: int = DEFAULT_MAX_SLICES
+    max_inflight: int = 256  # worker-ring capacity (paper §4.4)
+    gamma: float = 0.05
+    tier_penalty: Optional[Dict[int, float]] = None
+    reset_interval: float = 30.0  # periodic state reset (paper §4.2)
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
+    # datapath overheads (paper §4.4): per-post submission cost, amortized by
+    # opportunistic batched posting of `post_batch` work requests.
+    submission_overhead: float = 1.5e-6
+    post_batch: int = 16
+    global_diffusion_weight: float = 0.0  # omega, off by default
+
+
+@dataclasses.dataclass
+class _TransferCB:
+    req: TransferRequest
+    plan: TransportPlan
+    remaining: int
+    batch_id: int
+
+
+@dataclasses.dataclass
+class _BatchCB:
+    batch_id: int
+    state: BatchState = BatchState.OPEN
+    remaining_slices: int = 0  # hierarchical top-level counter
+    transfers: List[_TransferCB] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    completed_at: float = 0.0
+    error: Optional[str] = None
+    callbacks: List[Callable[["_BatchCB"], None]] = dataclasses.field(default_factory=list)
+
+    @property
+    def bytes_total(self) -> int:
+        return sum(t.req.length for t in self.transfers)
+
+
+@dataclasses.dataclass
+class BatchResult:
+    batch_id: int
+    ok: bool
+    submitted_at: float
+    completed_at: float
+    bytes: int
+    error: Optional[str] = None
+
+    @property
+    def elapsed(self) -> float:
+        return self.completed_at - self.submitted_at
+
+    @property
+    def throughput(self) -> float:
+        return self.bytes / max(self.elapsed, 1e-12)
+
+
+@dataclasses.dataclass
+class _InflightSlice:
+    sl: Slice
+    tcb: _TransferCB
+    path: WirePath
+    t_pred: float
+    queued_at_schedule: int
+    scheduled_at: float
+
+
+class TentEngine:
+    """One engine instance (one process in the paper's deployment model)."""
+
+    def __init__(
+        self,
+        spec: Optional[FabricSpec] = None,
+        *,
+        topology: Optional[Topology] = None,
+        fabric: Optional[Fabric] = None,
+        segments: Optional[SegmentManager] = None,
+        config: Optional[EngineConfig] = None,
+        seed: int = 0,
+    ):
+        if topology is None:
+            topology = Topology(spec or FabricSpec())
+        self.topology = topology
+        self.fabric = fabric or Fabric(topology, seed=seed)
+        self.segments = segments or SegmentManager()
+        self.config = config or EngineConfig()
+        self.backends = load_backends(topology)
+        self.orchestrator = Orchestrator(self.backends)
+        self.store = TelemetryStore()
+        self.store.global_weight = self.config.global_diffusion_weight
+        self.policy = self._make_policy(self.config)
+        self.health = HealthMonitor(self.store, self.config.health)
+        self._batches: Dict[int, _BatchCB] = {}
+        self._pending: Deque[Tuple[Slice, _TransferCB]] = deque()
+        self._inflight = 0
+        self._open_work = 0  # batches submitted but not completed
+        self._reset_timer_armed = False
+        self._probe_timer_armed = False
+        # observability
+        self.slice_latencies: List[float] = []
+        self.transfer_records: List[BatchResult] = []
+        self.slices_retried = 0
+        self.backend_substitutions = 0
+        # pre-register telemetry for every link so resets/benchmarks see all
+        for link in topology.links:
+            self.store.ensure(link)
+
+    def _make_policy(self, cfg: EngineConfig) -> Policy:
+        if cfg.policy == "tent":
+            return TentPolicy(
+                tier_penalty=cfg.tier_penalty or dict(DEFAULT_TIER_PENALTY),
+                gamma=cfg.gamma,
+                store=self.store,
+            )
+        return make_policy(cfg.policy)
+
+    # ------------------------------------------------------------------ API
+    def register_segment(self, location: Location, length: int, **kw) -> Segment:
+        seg = self.segments.register(location, length, **kw)
+        # derive transport capabilities from the topology (paper §3.1)
+        caps = [
+            be.name
+            for be in self.backends.values()
+            if any(
+                be.feasible(location, other.location) or be.feasible(other.location, location)
+                for other in self.segments.all_segments()
+            )
+        ]
+        self.segments.set_transports(seg.segment_id, caps)
+        return seg
+
+    def allocate_batch(self) -> int:
+        bc = _BatchCB(batch_id=next_batch_id())
+        self._batches[bc.batch_id] = bc
+        return bc.batch_id
+
+    def submit_transfer(
+        self,
+        batch_id: int,
+        transfers: Sequence[Tuple[int, int, int, int, int]],
+    ) -> None:
+        """transfers: (src_segment, src_offset, dst_segment, dst_offset, length)."""
+        bc = self._batches[batch_id]
+        if bc.state not in (BatchState.OPEN, BatchState.SUBMITTED):
+            raise TentError("BatchClosed", f"batch {batch_id} is {bc.state}")
+        first_submit = bc.state == BatchState.OPEN
+        if first_submit:
+            bc.state = BatchState.SUBMITTED
+            bc.submitted_at = self.fabric.now
+            self._open_work += 1
+            self._arm_reset_timer()
+        for (src, soff, dst, doff, length) in transfers:
+            req = TransferRequest(
+                transfer_id=next_transfer_id(),
+                src_segment=src, src_offset=soff,
+                dst_segment=dst, dst_offset=doff, length=length,
+            )
+            plan = self.orchestrator.resolve(self.segments.get(src), self.segments.get(dst))
+            slices = decompose(
+                req, batch_id,
+                slice_bytes=self.config.slice_bytes, max_slices=self.config.max_slices,
+            )
+            tcb = _TransferCB(req=req, plan=plan, remaining=len(slices), batch_id=batch_id)
+            bc.transfers.append(tcb)
+            bc.remaining_slices += len(slices)
+            for sl in slices:
+                sl.submitted_at = self.fabric.now
+                self._pending.append((sl, tcb))
+        self._dispatch()
+
+    def on_batch_done(self, batch_id: int, fn: Callable[[BatchResult], None]) -> None:
+        bc = self._batches[batch_id]
+        bc.callbacks.append(lambda b: fn(self._result(b)))
+
+    def get_transfer_status(self, batch_id: int) -> Tuple[BatchState, int]:
+        bc = self._batches[batch_id]
+        return bc.state, bc.remaining_slices
+
+    def wait(self, batch_id: int, *, max_events: int = 50_000_000) -> BatchResult:
+        bc = self._batches[batch_id]
+        n = 0
+        while bc.state == BatchState.SUBMITTED:
+            if not self.fabric.step():
+                raise TentError("Stalled", f"batch {batch_id} stuck with no events")
+            n += 1
+            if n > max_events:
+                raise TentError("Livelock", f"batch {batch_id} exceeded event budget")
+        return self._result(bc)
+
+    def run_until_idle(self) -> None:
+        self.fabric.run_until_idle()
+
+    def transfer_sync(self, src: int, soff: int, dst: int, doff: int, length: int) -> BatchResult:
+        b = self.allocate_batch()
+        self.submit_transfer(b, [(src, soff, dst, doff, length)])
+        return self.wait(b)
+
+    def _result(self, bc: _BatchCB) -> BatchResult:
+        return BatchResult(
+            batch_id=bc.batch_id,
+            ok=bc.state == BatchState.DONE,
+            submitted_at=bc.submitted_at,
+            completed_at=bc.completed_at,
+            bytes=bc.bytes_total,
+            error=bc.error,
+        )
+
+    # ------------------------------------------------------------- dispatch
+    def _dispatch(self) -> None:
+        while self._pending and self._inflight < self.config.max_inflight:
+            sl, tcb = self._pending.popleft()
+            if self._batches[tcb.batch_id].state != BatchState.SUBMITTED:
+                continue  # batch already failed; drop
+            self._issue(sl, tcb, retry_exclude=())
+
+    def _candidates(self, tcb: _TransferCB, hop: int) -> Tuple[List[Candidate], List[WirePath]]:
+        stage = tcb.plan.current.stages[hop]
+        be = self.backends[stage.backend]
+        paths = be.paths(stage.src, stage.dst)
+        cands = [Candidate(self.store.ensure(p.local), p.tier) for p in paths]
+        return cands, paths
+
+    def _issue(self, sl: Slice, tcb: _TransferCB, *, retry_exclude: Sequence[int]) -> None:
+        """Schedule one slice hop via the policy (or the reliability-first
+        retry chooser) and post it to the fabric."""
+        try:
+            cands, paths = self._candidates(tcb, sl.hop)
+            if retry_exclude or sl.attempts > 0:
+                chosen = self.health.choose_retry(cands, retry_exclude)
+                if chosen is None:
+                    raise TentError("NoRetryCandidate", "all rails excluded")
+                chosen.telemetry.on_schedule(sl.length)  # retries still charge queues
+            else:
+                chosen = self.policy.choose(cands, sl.length)
+        except TentError:
+            # No candidates on this backend: substitute the whole transport.
+            if tcb.plan.substitute():
+                self.backend_substitutions += 1
+                sl.hop = 0
+                self._issue(sl, tcb, retry_exclude=())
+                return
+            self._fail_batch(tcb, EXHAUSTED_RETRIES)
+            return
+
+        sl.route_idx = tcb.plan.route_idx
+        path = next(p for p in paths if p.local.link_id == chosen.link_id)
+        tl = chosen.telemetry
+        queued_at_schedule = tl.queued_bytes  # includes this slice (line 11)
+        t_pred = tl.beta0 + tl.beta1 * queued_at_schedule / tl.desc.bandwidth
+        inf = _InflightSlice(
+            sl=sl, tcb=tcb, path=path, t_pred=t_pred,
+            queued_at_schedule=queued_at_schedule, scheduled_at=self.fabric.now,
+        )
+        sl.state = SliceState.INFLIGHT
+        sl.scheduled_link = path.local.link_id
+        self._inflight += 1
+        extra = path.extra_latency + self.config.submission_overhead / max(self.config.post_batch, 1)
+        self.fabric.post(
+            path.local.link_id,
+            path.remote.link_id if path.remote is not None else None,
+            sl.length,
+            lambda ok, t0, t1, err, i=inf: self._on_wire_complete(i, ok, t1, err),
+            extra_latency=extra,
+            bw_scale=path.bw_factor,
+        )
+
+    # ----------------------------------------------------------- completion
+    def _on_wire_complete(self, inf: _InflightSlice, ok: bool, t_end: float, err: str) -> None:
+        self._inflight -= 1
+        sl, tcb, tl = inf.sl, inf.tcb, self.store.get(inf.path.local.link_id)
+        if ok:
+            t_obs = t_end - inf.scheduled_at
+            tl.on_complete(sl.length, inf.queued_at_schedule, t_obs)
+            self.health.observe(tl.desc.link_id, t_obs, inf.t_pred)
+            if tl.excluded:
+                self._arm_probe_timer()  # implicit exclusion -> start probing
+            route = tcb.plan.current
+            if sl.hop + 1 < len(route.stages):
+                sl.hop += 1
+                self._issue(sl, tcb, retry_exclude=())  # pipelined staged hop
+            else:
+                self._finish_slice(sl, tcb, t_end)
+        else:
+            tl.on_cancel(sl.length)
+            self.health.on_explicit_failure(inf.path.local.link_id)
+            self._arm_probe_timer()
+            sl.attempts += 1
+            self.slices_retried += 1
+            if sl.attempts > self.config.health.retry_limit:
+                if sl.route_idx != tcb.plan.route_idx:
+                    # another slice already substituted the backend: follow
+                    sl.hop = 0
+                    sl.attempts = 0
+                    self._issue(sl, tcb, retry_exclude=())
+                elif tcb.plan.substitute():
+                    self.backend_substitutions += 1
+                    sl.hop = 0
+                    sl.attempts = 0
+                    self._issue(sl, tcb, retry_exclude=())
+                else:
+                    self._fail_batch(tcb, EXHAUSTED_RETRIES)
+            else:
+                # In-band recovery: reschedule on an alternative path now.
+                self._issue(sl, tcb, retry_exclude=(inf.path.local.link_id,))
+        self._dispatch()
+
+    def _finish_slice(self, sl: Slice, tcb: _TransferCB, t_end: float) -> None:
+        # Idempotent write to the absolute destination offset. For staged
+        # routes the intermediate hops are timing-only; bytes land here.
+        src_seg = self.segments.get(sl.src_segment)
+        dst_seg = self.segments.get(sl.dst_segment)
+        dst_seg.write(sl.dst_offset, src_seg.read(sl.src_offset, sl.length))
+        sl.state = SliceState.DONE
+        sl.completed_at = t_end
+        self.slice_latencies.append(t_end - sl.submitted_at)
+        tcb.remaining -= 1
+        bc = self._batches[tcb.batch_id]
+        bc.remaining_slices -= 1
+        if bc.remaining_slices == 0 and bc.state == BatchState.SUBMITTED:
+            bc.state = BatchState.DONE
+            bc.completed_at = t_end
+            self._open_work -= 1
+            res = self._result(bc)
+            self.transfer_records.append(res)
+            for cb in bc.callbacks:
+                cb(bc)
+
+    def _fail_batch(self, tcb: _TransferCB, code: str) -> None:
+        bc = self._batches[tcb.batch_id]
+        if bc.state == BatchState.SUBMITTED:
+            bc.state = BatchState.FAILED
+            bc.error = code
+            bc.completed_at = self.fabric.now
+            self._open_work -= 1
+            for cb in bc.callbacks:
+                cb(bc)
+
+    # ----------------------------------------------------------- timers
+    def _arm_reset_timer(self) -> None:
+        if self._reset_timer_armed or self.config.reset_interval <= 0:
+            return
+        self._reset_timer_armed = True
+        self.fabric.call_after(self.config.reset_interval, self._on_reset_timer)
+
+    def _on_reset_timer(self) -> None:
+        self._reset_timer_armed = False
+        # Periodic state reset (paper §4.2): forget learned penalties and
+        # re-admit excluded rails so recovered paths rejoin the pool.
+        for lid in self.health.excluded_links():
+            self.health.readmit(lid)
+        self.store.reset_all()
+        if self._open_work > 0:
+            self._arm_reset_timer()
+
+    def _arm_probe_timer(self) -> None:
+        if self._probe_timer_armed or self.config.health.probe_interval <= 0:
+            return
+        self._probe_timer_armed = True
+        self.fabric.call_after(self.config.health.probe_interval, self._on_probe_timer)
+
+    def _on_probe_timer(self) -> None:
+        self._probe_timer_armed = False
+        excluded = self.health.excluded_links()
+        if not excluded:
+            return
+        for lid in excluded:
+            self.fabric.post(
+                lid, None, self.config.health.probe_bytes,
+                lambda ok, t0, t1, err, l=lid: self._on_probe_done(l, ok),
+            )
+        if self._open_work > 0:
+            self._arm_probe_timer()
+
+    def _on_probe_done(self, link_id: int, ok: bool) -> None:
+        if ok:
+            self.health.readmit(link_id)
+
+    # ----------------------------------------------------------- metrics
+    def percentile_latency(self, q: float) -> float:
+        if not self.slice_latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.slice_latencies), q))
+
+    def bytes_by_link(self) -> Dict[int, int]:
+        return self.fabric.bytes_by_link()

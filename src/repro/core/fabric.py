@@ -1,0 +1,249 @@
+"""Deterministic discrete-event fabric simulator.
+
+This is the "hardware" under the transport backends. Each physical link is a
+serial resource with nominal bandwidth, base latency, a NUMA-crossing
+submission cost, multiplicative time-varying degradation, stochastic service
+jitter, and scheduled failures (flaps). Wire operations occupy a source link
+and optionally a destination link (two-resource serialization models receiver
+incast). The virtual clock makes the paper's latency/throughput/resilience
+experiments exactly reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .topology import LinkDesc, Topology
+
+# completion callback: (ok, start_time, end_time, error_code)
+Completion = Callable[[bool, float, float, str], None]
+
+_op_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class WireOp:
+    op_id: int
+    src_link: int
+    dst_link: Optional[int]
+    nbytes: int
+    extra_latency: float
+    on_complete: Completion
+    start: float = 0.0
+    end: float = 0.0
+    cancelled: bool = False
+    failed: bool = False
+
+
+@dataclasses.dataclass
+class _DegradeWindow:
+    start: float
+    end: float
+    factor: float  # effective bandwidth multiplier in (0, 1]
+
+
+class LinkState:
+    """Runtime state of one link."""
+
+    def __init__(self, desc: LinkDesc, jitter: float, rng: np.random.Generator):
+        self.desc = desc
+        self.busy_until = 0.0
+        self.failed = False
+        self.fail_windows: List[Tuple[float, float]] = []
+        self.degrade_windows: List[_DegradeWindow] = []
+        self.jitter = jitter
+        self.rng = rng
+        self.outstanding: Dict[int, WireOp] = {}
+        # telemetry the paper's per-NIC byte counters expose (§5.1.3)
+        self.bytes_completed = 0
+        self.ops_completed = 0
+        self.ops_failed = 0
+
+    def effective_bandwidth(self, t: float) -> float:
+        # windows are sorted by start; expired ones are pruned as the clock
+        # only moves forward (keeps this O(1) amortized under long schedules)
+        while self.degrade_windows and self.degrade_windows[0].end <= t:
+            self.degrade_windows.pop(0)
+        bw = self.desc.bandwidth
+        for w in self.degrade_windows:
+            if w.start > t:
+                break
+            if w.start <= t < w.end:
+                bw *= w.factor
+        return bw
+
+    def is_failed(self, t: float) -> bool:
+        if self.failed:
+            return True
+        while self.fail_windows and self.fail_windows[0][1] <= t:
+            self.fail_windows.pop(0)
+        for s, e in self.fail_windows:
+            if s > t:
+                break
+            if s <= t < e:
+                return True
+        return False
+
+
+class Fabric:
+    """Event-driven cluster fabric: links + virtual clock + fault schedule."""
+
+    FAIL_DETECT_LATENCY = 200e-6  # completion-error surfacing delay (s)
+
+    def __init__(self, topology: Topology, *, seed: int = 0, jitter: float = 0.02):
+        self.topology = topology
+        self.now = 0.0
+        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._rng = np.random.default_rng(seed)
+        self.links: Dict[int, LinkState] = {
+            l.link_id: LinkState(l, jitter, np.random.default_rng(seed * 7919 + l.link_id))
+            for l in topology.links
+        }
+
+    # -- event loop ----------------------------------------------------------
+    def call_at(self, t: float, fn: Callable[[], None]) -> None:
+        if t < self.now:
+            t = self.now
+        heapq.heappush(self._events, (t, next(self._seq), fn))
+
+    def call_after(self, dt: float, fn: Callable[[], None]) -> None:
+        self.call_at(self.now + dt, fn)
+
+    def step(self) -> bool:
+        if not self._events:
+            return False
+        t, _, fn = heapq.heappop(self._events)
+        self.now = max(self.now, t)
+        fn()
+        return True
+
+    def run_until_idle(self, *, max_events: int = 50_000_000) -> None:
+        n = 0
+        while self.step():
+            n += 1
+            if n > max_events:
+                raise RuntimeError("fabric event budget exceeded (livelock?)")
+
+    def run_until(self, t: float) -> None:
+        while self._events and self._events[0][0] <= t:
+            self.step()
+        self.now = max(self.now, t)
+
+    @property
+    def idle(self) -> bool:
+        return not self._events
+
+    # -- fault / degradation schedule -----------------------------------------
+    def schedule_failure(self, link_id: int, at: float, recover_at: float) -> None:
+        link = self.links[link_id]
+        link.fail_windows.append((at, recover_at))
+        link.fail_windows.sort()
+        self.call_at(at, lambda: self._on_link_fail(link_id))
+
+    def schedule_degradation(self, link_id: int, at: float, until: float, factor: float) -> None:
+        assert 0 < factor <= 1.0
+        wins = self.links[link_id].degrade_windows
+        wins.append(_DegradeWindow(at, until, factor))
+        wins.sort(key=lambda w: w.start)
+
+    def _on_link_fail(self, link_id: int) -> None:
+        """Abort all in-flight ops on the failed link (paper §2.3: a flapping
+        NIC stops accepting work requests; in-flight transfers abort)."""
+        link = self.links[link_id]
+        for op in list(link.outstanding.values()):
+            if not op.cancelled:
+                op.cancelled = True
+                op.failed = True
+                self._release(op)
+                self.call_after(
+                    self.FAIL_DETECT_LATENCY,
+                    lambda o=op: o.on_complete(False, o.start, self.now, "LinkFailed"),
+                )
+        link.busy_until = self.now
+
+    # -- data path -------------------------------------------------------------
+    def post(
+        self,
+        src_link: int,
+        dst_link: Optional[int],
+        nbytes: int,
+        on_complete: Completion,
+        *,
+        extra_latency: float = 0.0,
+        bw_scale: float = 1.0,
+    ) -> int:
+        """Post one wire operation. Returns op id. Completion is delivered
+        through the event loop (success or failure)."""
+        op = WireOp(
+            op_id=next(_op_ids), src_link=src_link, dst_link=dst_link,
+            nbytes=nbytes, extra_latency=extra_latency, on_complete=on_complete,
+        )
+        src = self.links[src_link]
+        dst = self.links[dst_link] if dst_link is not None else None
+
+        if src.is_failed(self.now) or (dst is not None and dst.is_failed(self.now)):
+            # Immediate error completion after the detection delay.
+            op.failed = True
+            self.call_after(
+                self.FAIL_DETECT_LATENCY,
+                lambda: on_complete(False, self.now, self.now, "LinkFailed"),
+            )
+            return op.op_id
+
+        start = max(self.now, src.busy_until, dst.busy_until if dst else 0.0)
+        bw = src.effective_bandwidth(start)
+        if dst is not None:
+            bw = min(bw, dst.effective_bandwidth(start))
+        service = nbytes / (bw * bw_scale)
+        if src.jitter > 0:
+            service *= float(1.0 + abs(src.rng.normal(0.0, src.jitter)))
+        lat = src.desc.base_latency + extra_latency
+        # the link is busy for the serialization time only; propagation and
+        # submission latency pipeline with the next op (real NICs/DMA do)
+        busy_end = start + service
+        end = busy_end + lat
+        op.start, op.end = start, end
+        src.busy_until = busy_end
+        if dst is not None:
+            dst.busy_until = busy_end
+        src.outstanding[op.op_id] = op
+        if dst is not None:
+            dst.outstanding[op.op_id] = op
+        self.call_at(end, lambda: self._complete(op))
+        return op.op_id
+
+    def _complete(self, op: WireOp) -> None:
+        if op.cancelled:
+            return
+        # A failure window may have opened after posting but before completion.
+        src = self.links[op.src_link]
+        dst = self.links[op.dst_link] if op.dst_link is not None else None
+        mid_fail = any(
+            l.is_failed(op.end) or l.is_failed(op.start)
+            for l in ([src] + ([dst] if dst else []))
+        )
+        self._release(op)
+        if mid_fail:
+            src.ops_failed += 1
+            op.on_complete(False, op.start, self.now, "LinkFailed")
+            return
+        src.bytes_completed += op.nbytes
+        src.ops_completed += 1
+        op.on_complete(True, op.start, self.now, "")
+
+    def _release(self, op: WireOp) -> None:
+        self.links[op.src_link].outstanding.pop(op.op_id, None)
+        if op.dst_link is not None:
+            self.links[op.dst_link].outstanding.pop(op.op_id, None)
+
+    # -- introspection -----------------------------------------------------------
+    def link(self, link_id: int) -> LinkState:
+        return self.links[link_id]
+
+    def bytes_by_link(self) -> Dict[int, int]:
+        return {i: l.bytes_completed for i, l in self.links.items()}

@@ -1,0 +1,141 @@
+"""Phase 1: Dynamic Orchestration (paper §4.1).
+
+The orchestrator resolves a declarative transfer into a *transport plan*: a
+ranked list of route options (direct backends or synthesized staged routes),
+each annotated with tier info. Binding is late — the plan retains multiple
+candidates so later phases can steer slices away from congested/failed rails
+and substitute whole backends without application involvement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from .segments import Segment
+from .transports import TransportBackend
+from .types import Location, MemoryKind, TentError, UNREACHABLE
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One hop of a (possibly multi-hop) route."""
+
+    backend: str
+    src: Location
+    dst: Location
+
+
+@dataclasses.dataclass
+class RouteOption:
+    """A complete way to realize the transfer: one or more stages, ranked by
+    nominal aggregate bandwidth of its bottleneck stage."""
+
+    stages: List[Stage]
+    rank_bandwidth: float
+
+    @property
+    def direct(self) -> bool:
+        return len(self.stages) == 1
+
+    @property
+    def backend_names(self) -> List[str]:
+        return [s.backend for s in self.stages]
+
+
+@dataclasses.dataclass
+class TransportPlan:
+    src: Location
+    dst: Location
+    options: List[RouteOption]  # ranked best-first
+    route_idx: int = 0  # advanced by backend substitution (paper §4.3)
+
+    @property
+    def current(self) -> RouteOption:
+        return self.options[self.route_idx]
+
+    def substitute(self) -> bool:
+        """Promote the next-best transport. Returns False when exhausted."""
+        if self.route_idx + 1 < len(self.options):
+            self.route_idx += 1
+            return True
+        return False
+
+
+def _staging_host(loc: Location) -> Location:
+    """The internal host staging buffer location for a device/file endpoint."""
+    if loc.kind == MemoryKind.DEVICE_HBM:
+        return Location(node=loc.node, kind=MemoryKind.HOST_DRAM, device=0, numa=loc.numa)
+    if loc.kind == MemoryKind.FILE:
+        return Location(node=loc.node, kind=MemoryKind.HOST_DRAM, device=0, numa=0)
+    return loc
+
+
+class Orchestrator:
+    """Enumerates feasible paths through the heterogeneous fabric and emits
+    ranked transport plans. Pure control plane: no bytes move here."""
+
+    def __init__(self, backends: Dict[str, TransportBackend]):
+        self.backends = backends
+
+    # -- public -------------------------------------------------------------
+    def resolve(self, src_seg: Segment, dst_seg: Segment) -> TransportPlan:
+        src, dst = src_seg.location, dst_seg.location
+        options = self._direct_options(src, dst) + self._staged_options(src, dst)
+        if not options:
+            raise TentError(UNREACHABLE, f"no route {src} -> {dst}")
+        options.sort(key=lambda o: (-o.rank_bandwidth, len(o.stages)))
+        return TransportPlan(src=src, dst=dst, options=options)
+
+    # -- direct -------------------------------------------------------------
+    def _direct_options(self, src: Location, dst: Location) -> List[RouteOption]:
+        out: List[RouteOption] = []
+        for be in self.backends.values():
+            if be.feasible(src, dst):
+                bw = be.rank_bandwidth(src, dst)
+                if bw > 0:
+                    out.append(RouteOption([Stage(be.name, src, dst)], bw))
+        return out
+
+    # -- staged synthesis (paper §4.1: D2H -> H2H -> H2D pipelined) ----------
+    def _staged_options(self, src: Location, dst: Location) -> List[RouteOption]:
+        if src.node == dst.node and src.kind == dst.kind == MemoryKind.HOST_DRAM:
+            return []
+        hops: List[Stage] = []
+        cur = src
+        if src.kind != MemoryKind.HOST_DRAM:
+            stage = _staging_host(src)
+            be = self._hop_backend(cur, stage)
+            if be is None:
+                return []
+            hops.append(Stage(be, cur, stage))
+            cur = stage
+        if cur.node != dst.node:
+            remote_host = _staging_host(dst) if dst.kind != MemoryKind.HOST_DRAM else dst
+            be = self._hop_backend(cur, remote_host)
+            if be is None:
+                return []
+            hops.append(Stage(be, cur, remote_host))
+            cur = remote_host
+        if cur != dst:
+            be = self._hop_backend(cur, dst)
+            if be is None:
+                return []
+            hops.append(Stage(be, cur, dst))
+        if len(hops) <= 1:
+            return []
+        # Bottleneck stage bandwidth ranks the whole staged route; staged
+        # routes are always out-ranked by a feasible direct fast fabric.
+        bw = min(self._hop_bw(s) for s in hops) * 0.9
+        return [RouteOption(hops, bw)]
+
+    def _hop_backend(self, src: Location, dst: Location) -> str | None:
+        best, best_bw = None, 0.0
+        for be in self.backends.values():
+            if be.feasible(src, dst):
+                bw = be.rank_bandwidth(src, dst)
+                if bw > best_bw:
+                    best, best_bw = be.name, bw
+        return best
+
+    def _hop_bw(self, stage: Stage) -> float:
+        return self.backends[stage.backend].rank_bandwidth(stage.src, stage.dst)

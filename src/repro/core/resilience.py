@@ -1,0 +1,99 @@
+"""Phase 3: Proactive dual-layer resilience (paper §4.3).
+
+Link layer: implicit (telemetry: predicted completion times growing vs
+peers) and explicit (completion errors) signals drive *soft exclusion* —
+the rail's cost becomes infinite and it leaves the candidate set without
+heavyweight reconfiguration. A background prober sends lightweight
+heartbeat slices to excluded rails and gradually re-admits responsive ones.
+
+Transport layer: when a whole backend turns fatal, the orchestrator promotes
+the next-best transport from the Phase-1 plan (backend substitution).
+
+Slice layer: failures surface as per-slice errors; because slices write to
+absolute destination offsets, re-execution is idempotent. Retries bypass the
+predictive model and prioritize reliability (low tier, few failures), but
+their bytes are still charged to the global queue statistics so recovery
+traffic cannot starve unrelated flows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+from .scheduler import Candidate
+from .telemetry import TelemetryStore
+
+
+@dataclasses.dataclass
+class HealthConfig:
+    degrade_ratio: float = 4.0  # observed/predicted ratio that counts as slow
+    degrade_min_time: float = 2e-3  # absolute floor: microsecond noise is not degradation
+    degrade_consecutive: int = 3  # consecutive slow slices before exclusion
+    probe_interval: float = 0.05  # seconds between heartbeat rounds
+    probe_bytes: int = 64 * 1024  # lightweight heartbeat slice
+    retry_limit: int = 8
+
+
+class HealthMonitor:
+    """Tracks rail health and drives exclusion / probing / re-admission."""
+
+    def __init__(self, store: TelemetryStore, cfg: HealthConfig):
+        self.store = store
+        self.cfg = cfg
+        self.exclusions = 0
+        self.readmissions = 0
+
+    # -- implicit signal (paper: the telemetry loop naturally detects
+    # struggling rails as predicted completion times grow) -------------------
+    def observe(self, link_id: int, t_obs: float, t_pred: float) -> None:
+        tl = self.store.maybe(link_id)
+        if tl is None or tl.excluded:
+            return
+        if t_pred > 0 and t_obs > self.cfg.degrade_ratio * t_pred and t_obs > self.cfg.degrade_min_time:
+            tl.consecutive_slow += 1
+            if tl.consecutive_slow >= self.cfg.degrade_consecutive:
+                self.exclude(link_id)
+        else:
+            tl.consecutive_slow = 0
+
+    # -- explicit signal (completion failures / timeouts) ---------------------
+    def on_explicit_failure(self, link_id: int) -> None:
+        tl = self.store.maybe(link_id)
+        if tl is not None:
+            tl.on_failure()
+        self.exclude(link_id)
+
+    def exclude(self, link_id: int) -> None:
+        tl = self.store.maybe(link_id)
+        if tl is not None and not tl.excluded:
+            tl.excluded = True
+            self.exclusions += 1
+
+    def readmit(self, link_id: int) -> None:
+        tl = self.store.maybe(link_id)
+        if tl is not None and tl.excluded:
+            tl.excluded = False
+            tl.reset()
+            self.readmissions += 1
+
+    def excluded_links(self) -> List[int]:
+        return [lid for lid, tl in self.store.items() if tl.excluded]
+
+    # -- retry path selection (reliability over latency) ----------------------
+    def choose_retry(
+        self, candidates: Sequence[Candidate], exclude_links: Sequence[int]
+    ) -> Candidate | None:
+        elig = [
+            c
+            for c in candidates
+            if not c.telemetry.excluded and c.link_id not in exclude_links
+            and c.tier < 99
+        ]
+        if not elig:
+            # everything excluded: retry on the least-failed rail anyway
+            # (liveness over latency); the prober will sort the rest out.
+            elig = [c for c in candidates if c.link_id not in exclude_links and c.tier < 99]
+        if not elig:
+            return None
+        best = min(elig, key=lambda c: (c.tier, c.telemetry.failures, c.link_id))
+        return best

@@ -1,0 +1,232 @@
+"""Slice scheduling policies.
+
+`TentPolicy` implements the paper's Algorithm 1 (telemetry-driven slice
+scheduling) exactly: score every reachable candidate with the predictive
+cost model times a topology-tier penalty, keep the candidates within a
+tolerance window gamma of the best score, and round-robin among them; then
+charge the chosen device's local queue.
+
+The baseline policies reproduce the engines the paper compares against:
+  * RoundRobinPolicy  — Mooncake TE's state-blind fixed-size striping (§2.2)
+  * HashPolicy        — Mooncake TE's hashing variant
+  * StaticBest2Policy — NIXL/UCX: stripe across the statically best K NICs
+  * PinnedPolicy      — UCCL-P2P: each memory region is bound to one NIC
+
+All policies share the same interface so the engine (and TEBench) can swap
+them without touching anything else — that swap *is* the paper's ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .telemetry import LinkTelemetry, TelemetryStore
+from .topology import DEFAULT_TIER_PENALTY
+from .types import NO_ELIGIBLE_DEVICE, TentError
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One schedulable device (local link) with its affinity tier."""
+
+    telemetry: LinkTelemetry
+    tier: int
+
+    @property
+    def link_id(self) -> int:
+        return self.telemetry.desc.link_id
+
+
+class Policy:
+    name = "abstract"
+
+    def choose(self, candidates: Sequence[Candidate], length: int) -> Candidate:
+        raise NotImplementedError
+
+    def reset(self) -> None:  # pragma: no cover - most policies are stateless
+        pass
+
+
+class TentPolicy(Policy):
+    """Algorithm 1: Telemetry-Driven Slice Scheduling."""
+
+    name = "tent"
+
+    def __init__(
+        self,
+        *,
+        tier_penalty: Optional[Dict[int, float]] = None,
+        gamma: float = 0.05,
+        store: Optional[TelemetryStore] = None,
+    ):
+        self.tier_penalty = dict(tier_penalty or DEFAULT_TIER_PENALTY)
+        self.gamma = gamma
+        self.store = store
+        self._rr = 0
+
+    def scores(self, candidates: Sequence[Candidate], length: int) -> List[float]:
+        out = []
+        for c in candidates:
+            tl = c.telemetry
+            if tl.excluded:
+                out.append(float("inf"))  # soft exclusion (paper §4.3)
+                continue
+            queued = (
+                self.store.effective_queue(tl) if self.store is not None else float(tl.queued_bytes)
+            )
+            t_hat = tl.beta0 + tl.beta1 * (queued + length) / tl.desc.bandwidth
+            out.append(self.tier_penalty.get(c.tier, float("inf")) * t_hat)
+        return out
+
+    def choose(self, candidates: Sequence[Candidate], length: int) -> Candidate:
+        if not candidates:
+            raise TentError(NO_ELIGIBLE_DEVICE, "empty candidate set")
+        s = self.scores(candidates, length)
+        s_min = min(s)
+        if s_min == float("inf"):
+            # Soft exclusion must not deadlock: when every rail is excluded
+            # (e.g. a single-link hop under degradation), fall back to the
+            # cost model over tier-feasible rails, ignoring exclusion.
+            s = [
+                self.tier_penalty.get(c.tier, float("inf"))
+                * (c.telemetry.beta0 + c.telemetry.beta1
+                   * (c.telemetry.queued_bytes + length) / c.telemetry.desc.bandwidth)
+                for c in candidates
+            ]
+            s_min = min(s)
+            if s_min == float("inf"):
+                raise TentError(NO_ELIGIBLE_DEVICE, "no tier-feasible candidates")
+        window = [c for c, sc in zip(candidates, s) if sc <= (1 + self.gamma) * s_min]
+        chosen = window[self._rr % len(window)]
+        self._rr += 1
+        chosen.telemetry.on_schedule(length)  # line 11: A_d* += L
+        return chosen
+
+
+class RoundRobinPolicy(Policy):
+    """Mooncake TE-style state-blind striping: fixed rotation over the rails
+    permitted by static NUMA priority, ignoring congestion signals."""
+
+    name = "round_robin"
+
+    def __init__(self, *, max_tier: int = 3):
+        self.max_tier = max_tier
+        self._rr = 0
+
+    def choose(self, candidates: Sequence[Candidate], length: int) -> Candidate:
+        # state-blind: no exclusion filtering (TE has no telemetry loop)
+        elig = [c for c in candidates if c.tier <= self.max_tier]
+        if not elig:
+            raise TentError(NO_ELIGIBLE_DEVICE, "no round-robin candidates")
+        chosen = elig[self._rr % len(elig)]
+        self._rr += 1
+        chosen.telemetry.on_schedule(length)
+        return chosen
+
+
+class HashPolicy(Policy):
+    """Static hashing on the slice ordinal (Mooncake TE hashing mode)."""
+
+    name = "hash"
+
+    def __init__(self) -> None:
+        self._n = 0
+
+    def choose(self, candidates: Sequence[Candidate], length: int) -> Candidate:
+        elig = list(candidates)  # state-blind
+        if not elig:
+            raise TentError(NO_ELIGIBLE_DEVICE, "no hash candidates")
+        self._n += 1
+        idx = (self._n * 2654435761) % len(elig)
+        chosen = elig[idx]
+        chosen.telemetry.on_schedule(length)
+        return chosen
+
+
+class StaticBest2Policy(Policy):
+    """NIXL/UCX-style: rank NICs by static transport properties and stripe
+    large transfers over the best K only; small blocks use a single NIC."""
+
+    name = "static_best2"
+
+    def __init__(self, *, k: int = 2, multirail_threshold: int = 8 * 1024 * 1024):
+        self.k = k
+        self.multirail_threshold = multirail_threshold
+        self._rr = 0
+
+    def choose(self, candidates: Sequence[Candidate], length: int) -> Candidate:
+        elig = list(candidates)  # static transport properties only
+        if not elig:
+            raise TentError(NO_ELIGIBLE_DEVICE, "no static candidates")
+        ranked = sorted(elig, key=lambda c: (c.tier, -c.telemetry.desc.bandwidth, c.link_id))
+        if length < self.multirail_threshold:
+            chosen = ranked[0]
+        else:
+            top = ranked[: self.k]
+            chosen = top[self._rr % len(top)]
+            self._rr += 1
+        chosen.telemetry.on_schedule(length)
+        return chosen
+
+
+class PinnedPolicy(Policy):
+    """UCCL-P2P-style: each registered region is pinned to exactly one NIC
+    (its tier-1 / lowest-id rail); no cross-NIC aggregation."""
+
+    name = "pinned"
+
+    def choose(self, candidates: Sequence[Candidate], length: int) -> Candidate:
+        elig = list(candidates)  # fixed region->NIC binding
+        if not elig:
+            raise TentError(NO_ELIGIBLE_DEVICE, "no pinned candidates")
+        chosen = min(elig, key=lambda c: (c.tier, c.link_id))
+        chosen.telemetry.on_schedule(length)
+        return chosen
+
+
+POLICIES = {
+    p.name: p
+    for p in (TentPolicy, RoundRobinPolicy, HashPolicy, StaticBest2Policy, PinnedPolicy)
+}
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    try:
+        return POLICIES[name](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; have {sorted(POLICIES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Vectorized scoring (jnp) — used for parity tests and for batch scoring in
+# the JAX-side serving planner. Mirrors TentPolicy.scores exactly.
+# ---------------------------------------------------------------------------
+
+def tent_scores_jnp(queued, bandwidth, beta0, beta1, penalty, length):
+    """score_d = P_tier(d) * (beta0_d + beta1_d * (A_d + L) / B_d)."""
+    import jax.numpy as jnp
+
+    queued = jnp.asarray(queued, dtype=jnp.float32)
+    bandwidth = jnp.asarray(bandwidth, dtype=jnp.float32)
+    beta0 = jnp.asarray(beta0, dtype=jnp.float32)
+    beta1 = jnp.asarray(beta1, dtype=jnp.float32)
+    penalty = jnp.asarray(penalty, dtype=jnp.float32)
+    t_hat = beta0 + beta1 * (queued + length) / bandwidth
+    return penalty * t_hat
+
+
+def tent_choose_jnp(queued, bandwidth, beta0, beta1, penalty, length, rr, gamma=0.05):
+    """Pure-JAX argmin-with-tolerance-window selection (round-robin among the
+    near-ties indexed by `rr`). Returns the chosen device index."""
+    import jax.numpy as jnp
+
+    s = tent_scores_jnp(queued, bandwidth, beta0, beta1, penalty, length)
+    s_min = jnp.min(s)
+    in_window = s <= (1.0 + gamma) * s_min
+    n_win = jnp.sum(in_window)
+    k = jnp.asarray(rr, dtype=jnp.int32) % jnp.maximum(n_win, 1).astype(jnp.int32)
+    order = jnp.cumsum(in_window.astype(jnp.int32)) - 1  # rank within window
+    match = jnp.where(in_window & (order == k), jnp.arange(s.shape[0]), s.shape[0])
+    return jnp.min(match)

@@ -1,0 +1,121 @@
+"""Per-link telemetry and the predictive completion-time model (paper Eq. 1).
+
+    t_hat_d = beta0_d + beta1_d * (A_d + L) / B_d
+
+`B_d` is the *nominal* link bandwidth from topology discovery; `A_d` is the
+effective queue length in bytes (maintained by Algorithm 1 line 11); the
+coefficients beta are dynamic correction factors absorbing incast, switch
+congestion and silent degradation, updated by an EWMA filter from the
+prediction error on every slice completion. A periodic state reset prevents
+starvation of temporarily slow rails (paper §4.2 "Feedback").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .topology import LinkDesc
+
+DEFAULT_BETA0 = 0.0
+DEFAULT_BETA1 = 1.0
+
+
+@dataclasses.dataclass
+class LinkTelemetry:
+    desc: LinkDesc
+    beta0: float = DEFAULT_BETA0
+    beta0_prior: float = DEFAULT_BETA0  # topology-informed fixed-cost prior
+    beta1: float = DEFAULT_BETA1
+    queued_bytes: int = 0  # A_d
+    ewma_alpha: float = 0.25
+    beta0_alpha: float = 0.05
+    # health signals
+    consecutive_slow: int = 0
+    excluded: bool = False
+    # observability
+    completions: int = 0
+    failures: int = 0
+    ewma_service_time: float = 0.0
+
+    def predict(self, length: int) -> float:
+        """Estimated completion time for a new slice of `length` bytes."""
+        return self.beta0 + self.beta1 * (self.queued_bytes + length) / self.desc.bandwidth
+
+    def on_schedule(self, length: int) -> None:
+        self.queued_bytes += length
+
+    def on_cancel(self, length: int) -> None:
+        self.queued_bytes = max(0, self.queued_bytes - length)
+
+    def on_complete(self, length: int, queued_at_schedule: int, t_obs: float) -> None:
+        """EWMA update from the observed slice completion time.
+
+        The normalized load x = (A_sched + L) / B is what Eq. 1 multiplied by
+        beta1, so the per-sample estimate of beta1 is (t_obs - beta0)/x.
+        beta0 absorbs the residual fixed cost with a slower filter.
+        """
+        self.queued_bytes = max(0, self.queued_bytes - length)
+        self.completions += 1
+        x = (queued_at_schedule + length) / self.desc.bandwidth
+        if x > 0:
+            sample = (t_obs - self.beta0) / x
+            sample = min(max(sample, 0.05), 1e4)
+            self.beta1 = (1 - self.ewma_alpha) * self.beta1 + self.ewma_alpha * sample
+        resid = max(0.0, t_obs - self.beta1 * x)
+        self.beta0 = (1 - self.beta0_alpha) * self.beta0 + self.beta0_alpha * resid
+        a = self.ewma_alpha
+        self.ewma_service_time = (1 - a) * self.ewma_service_time + a * t_obs
+
+    def on_failure(self) -> None:
+        self.failures += 1
+
+    def reset(self) -> None:
+        """Periodic state reset (paper §4.2): forget learned penalties so that
+        recovered paths are re-integrated into the pool."""
+        self.beta0 = self.beta0_prior
+        self.beta1 = DEFAULT_BETA1
+        self.consecutive_slow = 0
+
+
+class TelemetryStore:
+    """All per-link telemetry for one engine instance, plus the optional
+    cross-process global load diffusion table (paper §4.2)."""
+
+    def __init__(self) -> None:
+        self._links: Dict[int, LinkTelemetry] = {}
+        # Optional shared-memory analogue: link_id -> global queued bytes
+        self.global_load: Dict[int, int] = {}
+        self.global_weight: float = 0.0  # omega_d, disabled by default
+
+    def ensure(self, desc: LinkDesc) -> LinkTelemetry:
+        tl = self._links.get(desc.link_id)
+        if tl is None:
+            # Topology discovery seeds the fixed-cost term with the link's
+            # known base latency so cold-start predictions aren't absurd.
+            tl = LinkTelemetry(desc=desc, beta0=desc.base_latency, beta0_prior=desc.base_latency)
+            self._links[desc.link_id] = tl
+        return tl
+
+    def get(self, link_id: int) -> LinkTelemetry:
+        return self._links[link_id]
+
+    def maybe(self, link_id: int):
+        return self._links.get(link_id)
+
+    def effective_queue(self, tl: LinkTelemetry) -> float:
+        """Blend local queue with the global load factor when diffusion is on."""
+        if self.global_weight <= 0.0:
+            return float(tl.queued_bytes)
+        g = float(self.global_load.get(tl.desc.link_id, 0))
+        return (1 - self.global_weight) * tl.queued_bytes + self.global_weight * g
+
+    def publish_global(self) -> None:
+        for lid, tl in self._links.items():
+            self.global_load[lid] = self.global_load.get(lid, 0) + tl.queued_bytes
+
+    def reset_all(self) -> None:
+        for tl in self._links.values():
+            tl.reset()
+
+    def items(self):
+        return self._links.items()

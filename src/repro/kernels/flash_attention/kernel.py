@@ -1,0 +1,131 @@
+"""Blockwise causal GQA flash attention — Pallas TPU kernel.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); the kv axis is innermost and
+sequential, so the fp32 running-max/denominator/accumulator scratch in VMEM
+persists across kv steps (the canonical TPU online-softmax pattern).
+
+BlockSpec tiling (per grid step, in VMEM):
+  q:  (1, 1, block_q, head_dim)
+  k,v:(1, 1, block_k, head_dim)  — kv head = q_head // group_size (GQA)
+  o:  (1, 1, block_q, head_dim)
+With block_q = block_k = 128 and head_dim <= 128 (all assigned archs), the
+working set is ~4 * 128 * 128 * 4B ≈ 256 KiB — comfortably inside the
+16 MiB VMEM budget, and every matmul dimension is 128-aligned for the MXU.
+
+Causal + sliding-window masking is applied inside the block; fully-masked
+blocks are skipped with pl.when (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_q: int, block_k: int, nk: int, scale: float,
+    causal: bool, window: int, seq_len: int,
+):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block (sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * block_q
+    k_start = j * block_k
+    # Skip blocks entirely above the causal diagonal or left of the window.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len  # padded keys never attend
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        l_prev = l_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = corr * l_prev + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, K, S, D)
+    v: jax.Array,  # (B, K, S, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    seq_len: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    assert H % K == 0, "q heads must be a multiple of kv heads"
+    assert S % block_q == 0 and S % block_k == 0, "caller pads to block multiple"
+    nq, nk = S // block_q, S // block_k
+    seq_len = S if seq_len is None else seq_len
+    scale = D ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q, block_k=block_k, nk=nk, scale=scale,
+        causal=causal, window=window, seq_len=seq_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running max (lane-replicated)
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running denominator
+            pltpu.VMEM((block_q, D), jnp.float32),  # fp32 output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""Jitted public wrapper: layout handling, padding, backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, K, D)
+    v: jax.Array,  # (B, S, K, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, S, H, D = q.shape
+    block_q = min(block_q, max(8, 1 << (S - 1).bit_length()))
+    block_k = min(block_k, block_q)
+    # pad q and kv to a common multiple so q-blocks and kv-blocks tile evenly
+    qt = _pad_to(q.transpose(0, 2, 1, 3), block_q, 2)  # (B,H,S',D)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), block_q, 2)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), block_q, 2)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, seq_len=S,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out[:, :, :S].transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, K, D)
+    v: jax.Array,  # (B, S, K, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

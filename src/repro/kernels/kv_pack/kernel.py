@@ -1,0 +1,85 @@
+"""KV-page gather/scatter — Pallas TPU kernel.
+
+The device-side hot spot of TENT's KV-cache movement: a HiCache-style radix
+tree keeps KV pages scattered across the cache pool, but the transfer engine
+wants contiguous slices to spray (one-sided writes to absolute offsets need
+contiguous source buffers). `kv_pack` gathers an arbitrary page-index list
+into a contiguous transfer buffer; `kv_unpack` scatters a received buffer
+back into pool pages.
+
+TPU-idiomatic adaptation: the page-index list is a *scalar-prefetch* operand
+(pltpu.PrefetchScalarGridSpec), so the DMA engine computes each block's HBM
+address from the index array before the grid step runs — the gather happens
+in the memory system, not as vector compute. Block = one page
+(page_size x kv_dim), which for page_size=16, kv_dim=256 is 8 KiB in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, dst_ref):
+    del idx_ref  # consumed by the index_map (scalar prefetch)
+    dst_ref[...] = src_ref[...]
+
+
+def kv_pack_pages(
+    pool: jax.Array,  # (num_pages, page_size, kv_dim)
+    indices: jax.Array,  # (n,) int32 — pages to gather, in slice order
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather pool[indices] into a contiguous (n, page_size, kv_dim) buffer."""
+    n = indices.shape[0]
+    _, page, dim = pool.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, page, dim), lambda i, idx: (idx[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, page, dim), lambda i, idx: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, page, dim), pool.dtype),
+        interpret=interpret,
+    )(indices, pool)
+
+
+def kv_unpack_pages(
+    pool: jax.Array,  # (num_pages, page_size, kv_dim) — pool to update
+    buf: jax.Array,  # (n, page_size, kv_dim) — received contiguous slices
+    indices: jax.Array,  # (n,) int32 — destination pages
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter buf rows into pool at `indices` (returns the updated pool).
+
+    Implemented with input/output aliasing so the pool is updated in place
+    on TPU (no full-pool copy)."""
+    n = indices.shape[0]
+    _, page, dim = pool.shape
+
+    def _scatter_kernel(idx_ref, buf_ref, pool_in_ref, pool_out_ref):
+        del idx_ref, pool_in_ref
+        pool_out_ref[...] = buf_ref[...]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, page, dim), lambda i, idx: (i, 0, 0)),
+            pl.BlockSpec((1, page, dim), lambda i, idx: (idx[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page, dim), lambda i, idx: (idx[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},  # alias pool input -> output
+        interpret=interpret,
+    )(indices, buf, pool)

@@ -1,0 +1,24 @@
+"""Jitted public wrappers for KV page pack/unpack."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import kv_pack_pages, kv_unpack_pages
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_pack(pool: jax.Array, indices: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return kv_pack_pages(pool, indices, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def kv_unpack(
+    pool: jax.Array, buf: jax.Array, indices: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return kv_unpack_pages(pool, buf, indices, interpret=interpret)

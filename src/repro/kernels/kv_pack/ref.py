@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for kv_pack/kv_unpack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_pack_ref(pool: jax.Array, indices: jax.Array) -> jax.Array:
+    return pool[indices]
+
+
+def kv_unpack_ref(pool: jax.Array, buf: jax.Array, indices: jax.Array) -> jax.Array:
+    return pool.at[indices].set(buf)

@@ -1,0 +1,106 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid: (batch, heads, chunks); the chunk axis is innermost and sequential, so
+the fp32 inter-chunk recurrent state (headdim x state) lives in VMEM scratch
+and flows from chunk to chunk without HBM round-trips. Per grid step the
+kernel does the intra-chunk quadratic block (chunk x chunk decay-masked
+attention-like matmuls, all 128-aligned for chunk=128/state=128) and one
+rank-(chunk) state update — the same decomposition the SSD paper uses to hit
+the MXU instead of a sequential scan.
+
+BlockSpec tiling (per grid step, in VMEM):
+  x: (1, 1, chunk, headdim)   a: (1, 1, chunk)
+  B, C: (1, chunk, state)     y: (1, 1, chunk, headdim)
+  state scratch: (headdim, state) fp32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, fin_ref, state_scr, *, nc: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (l, p)
+    a = a_ref[0, 0].astype(jnp.float32)  # (l,)
+    B = b_ref[0].astype(jnp.float32)  # (l, n)
+    C = c_ref[0].astype(jnp.float32)  # (l, n)
+    l = x.shape[0]
+
+    a_cs = jnp.cumsum(a)  # (l,)
+    seg = a_cs[:, None] - a_cs[None, :]  # seg[i,j] = sum_{k=j+1..i} a_k
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    Lmat = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    # intra-chunk quadratic block
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * Lmat  # (l, l)
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # inter-chunk contribution from the carried state
+    state = state_scr[...]  # (p, n)
+    y = y + jnp.exp(a_cs)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+    # state update: state' = decay(chunk) * state + x^T (B * decay_to_end)
+    decay_to_end = jnp.exp(a_cs[-1] - a_cs)  # (l,)
+    state_scr[...] = state * jnp.exp(a_cs[-1]) + jax.lax.dot_general(
+        x, B * decay_to_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(j == nc - 1)
+    def _finalize():
+        fin_ref[0, 0, :, :] = state_scr[...].astype(fin_ref.dtype)
+
+
+def ssd_scan_bhsp(
+    x: jax.Array,  # (B, H, S, P) — pre-multiplied by dt
+    a: jax.Array,  # (B, H, S)
+    B_in: jax.Array,  # (B, S, N)
+    C_in: jax.Array,  # (B, S, N)
+    s0: jax.Array,  # (B, H, P, N) initial state
+    *,
+    chunk: int,
+    interpret: bool = False,
+):
+    b, h, s, p = x.shape
+    n = B_in.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, j: (b, h, j)),
+            pl.BlockSpec((1, chunk, n), lambda b, h, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, h, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, B_in, C_in, s0)

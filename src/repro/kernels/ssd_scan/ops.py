@@ -1,0 +1,42 @@
+"""Jitted public wrapper matching repro.models.ssm.ssd_chunked's signature."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_bhsp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) — pre-multiplied by dt
+    a: jax.Array,  # (B, S, H)
+    B_in: jax.Array,  # (B, S, N)
+    C_in: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, s, h, p = x.shape
+    n = B_in.shape[-1]
+    chunk = min(chunk, max(8, 1 << (s - 1).bit_length()))
+    pad = (-s) % chunk
+    if pad:
+        # identity steps: x=0, B=0, a=0 leave the state untouched
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B_in = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0)))
+        C_in = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0)))
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    xt = x.transpose(0, 2, 1, 3)  # (B, H, S, P)
+    at = a.transpose(0, 2, 1)  # (B, H, S)
+    y, fin = ssd_scan_bhsp(xt, at, B_in, C_in, initial_state, chunk=chunk, interpret=interpret)
+    y = y.transpose(0, 2, 1, 3)[:, :s]
+    return y.astype(x.dtype), fin.astype(x.dtype)

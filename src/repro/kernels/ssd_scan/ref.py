@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD scan kernel: the step-by-step recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, S, H, P)
+    a: jax.Array,  # (B, S, H)
+    B_in: jax.Array,  # (B, S, N)
+    C_in: jax.Array,  # (B, S, N)
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+):
+    b, s, h, p = x.shape
+    n = B_in.shape[-1]
+    st0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(st, t_in):
+        x_t, a_t, B_t, C_t = t_in
+        st = st * jnp.exp(a_t.astype(jnp.float32))[..., None, None]
+        st = st + jnp.einsum("bhp,bn->bhpn", x_t.astype(jnp.float32), B_t.astype(jnp.float32))
+        y_t = jnp.einsum("bhpn,bn->bhp", st, C_t.astype(jnp.float32))
+        return st, y_t
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        a.transpose(1, 0, 2),
+        B_in.transpose(1, 0, 2),
+        C_in.transpose(1, 0, 2),
+    )
+    fin, ys = jax.lax.scan(step, st0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), fin

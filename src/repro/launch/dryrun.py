@@ -1,0 +1,319 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split  — the two lines above MUST precede any jax-importing module:
+# jax locks the device count at first backend initialization.
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ARCH_IDS, InputShape, ModelConfig, config_for_shape, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_terms
+from repro.models import abstract_params, cache_shapes, decode_step, loss_fn, param_shapes, prefill_forward
+from repro.models.model import forward
+from repro.sharding.ctx import activation_sharding
+from repro.sharding.rules import (
+    batch_axes,
+    batch_spec,
+    cache_partition_specs,
+    opt_state_specs,
+    param_partition_specs,
+)
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+"""Multi-pod dry-run: prove that every (architecture x input shape) lowers
+and compiles on the production meshes (16x16 single-pod and 2x16x16
+multi-pod), with no device allocation (ShapeDtypeStruct inputs only), and
+extract memory/cost/collective analyses for EXPERIMENTS.md.
+
+Decode shapes lower `serve_step` (one token against a seq_len KV cache);
+prefill lowers the cache-producing `prefill_forward`; train lowers a full
+AdamW `train_step`. long_500k uses the sliding-window serving variant for
+full-attention archs (see DESIGN.md §Arch-applicability).
+"""
+
+
+def _spec_tree(tree: Any, mesh, specs: Any):
+    """ShapeDtypeStructs with shardings attached."""
+    return jax.tree_util.tree_map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        tree,
+        specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+def _abstract_opt_state(params: Any) -> Any:
+    return {
+        "m": jax.tree_util.tree_map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+        "v": jax.tree_util.tree_map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(
+    arch: str, shape_name: str, mesh, *, fsdp: bool = True
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
+    allocation) for every model input of the (arch, shape) workload."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for_shape(get_config(arch), shape)
+    shapes = param_shapes(cfg)
+    pspecs = param_partition_specs(cfg, mesh, shapes, fsdp=fsdp)
+    params = _spec_tree(abstract_params(cfg), mesh, pspecs)
+    bsh = NamedSharding(mesh, _divisible_batch_spec(mesh, shape.global_batch))
+    rep = NamedSharding(mesh, P())
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {"cfg": cfg, "params": params, "pspecs": pspecs}
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bsh),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bsh),
+        }
+        if cfg.is_encdec:
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, S // 4, cfg.d_model), jnp.bfloat16, sharding=bsh
+            )
+        out["batch"] = batch
+        out["opt_state"] = _spec_tree(
+            _abstract_opt_state(params), mesh, opt_state_specs(pspecs)
+        )
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bsh)
+        if cfg.is_encdec:
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, S // 4, cfg.d_model), jnp.bfloat16, sharding=bsh
+            )
+    else:  # decode
+        enc_len = 1024 if cfg.is_encdec else 0
+        cshapes = cache_shapes(cfg, B, S, enc_len)
+        cspecs = cache_partition_specs(cfg, mesh, cshapes)
+        out["cache"] = _spec_tree(cshapes, mesh, cspecs)
+        out["cspecs"] = cspecs
+        out["token"] = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=bsh)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+    return out
+
+
+def _divisible_batch_spec(mesh, B: int) -> P:
+    """Batch over (pod, data), dropping trailing axes until B divides."""
+    axes = list(batch_axes(mesh))
+    while axes:
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if B % total == 0:
+            return P(tuple(axes) if len(axes) > 1 else axes[0])
+        axes.pop(0)
+    return P()
+
+
+def _lower(arch: str, shape_name: str, mesh, *, fsdp: bool = True, act_constraints: bool = True):
+    shape = INPUT_SHAPES[shape_name]
+    spec = input_specs(arch, shape_name, mesh, fsdp=fsdp)
+    cfg: ModelConfig = spec["cfg"]
+    pspecs = spec["pspecs"]
+    psh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    rep = NamedSharding(mesh, P())
+    with mesh, activation_sharding(mesh, enabled=act_constraints):
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+
+            def train_step(params, opt_state, batch):
+                (loss, aux), grads = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, batch), has_aux=True
+                )(params)
+                params, opt_state, opt_aux = adamw_update(opt_cfg, params, grads, opt_state)
+                return params, opt_state, {"loss": loss, **aux, **opt_aux}
+
+            osh = _spec_tree_shardings(spec["opt_state"], mesh)
+            fn = jax.jit(
+                train_step,
+                out_shardings=(psh, osh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(spec["params"], spec["opt_state"], spec["batch"])
+        elif shape.kind == "prefill":
+            enc_len = shape.seq_len // 4 if cfg.is_encdec else 0
+            cshapes = cache_shapes(cfg, shape.global_batch, shape.seq_len, enc_len)
+            cspecs = cache_partition_specs(cfg, mesh, cshapes)
+            csh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), cspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            if cfg.is_encdec:
+                lowered = jax.jit(
+                    lambda p, t, e: prefill_forward(cfg, p, t, enc_frames=e),
+                    out_shardings=(None, csh),
+                ).lower(spec["params"], spec["tokens"], spec["enc_frames"])
+            else:
+                lowered = jax.jit(
+                    lambda p, t: prefill_forward(cfg, p, t),
+                    out_shardings=(None, csh),
+                ).lower(spec["params"], spec["tokens"])
+        else:
+            csh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), spec["cspecs"],
+                is_leaf=lambda x: isinstance(x, P),
+            )
+
+            def serve_step(params, cache, token, pos):
+                return decode_step(cfg, params, cache, token, pos)
+
+            fn = jax.jit(serve_step, out_shardings=(None, csh), donate_argnums=(1,))
+            lowered = fn.lower(spec["params"], spec["cache"], spec["token"], spec["pos"])
+    return cfg, lowered
+
+
+def _spec_tree_shardings(tree: Any, mesh):
+    return jax.tree_util.tree_map(lambda sds: sds.sharding, tree)
+
+
+def _model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool, fsdp: bool = True,
+             act_constraints: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    shape = INPUT_SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": shape.kind,
+    }
+    cfg0 = get_config(arch)
+    if shape.kind == "decode" and shape.seq_len > 100_000 and cfg0.is_encdec:
+        # enc-dec long-context decode is exercised via sliding window too
+        pass
+    rec["act_constraints"] = act_constraints
+    t0 = time.time()
+    cfg, lowered = _lower(arch, shape_name, mesh, fsdp=fsdp, act_constraints=act_constraints)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    # --- memory analysis (proves it fits) ---
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            "argument_size_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_analysis"] = {"error": str(e)[:200]}
+    # analytic bytes/device (params + opt + cache), always available
+    rec["analytic_bytes_per_device"] = _analytic_bytes(arch, shape_name, mesh)
+    # --- cost analysis (FLOPs/bytes for the roofline) ---
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception as e:
+        cost = {}
+        rec["cost_error"] = str(e)[:200]
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)  # loop-aware accounting (see hlo_analysis.py)
+    roof = analyze_terms(
+        flops=stats.flops, hbm=stats.bytes, coll=stats.collective_bytes,
+        chips=chips, model_flops=_model_flops(cfg, shape),
+    )
+    rec["roofline"] = roof.to_dict()
+    rec["collectives"] = stats.collectives
+    rec["loops"] = stats.loops
+    rec["cost_analysis_raw"] = {
+        "flops": float(cost.get("flops", 0.0) or 0.0),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0) or 0.0),
+    }
+    rec["hlo_bytes"] = len(hlo)
+    return rec
+
+
+def _analytic_bytes(arch: str, shape_name: str, mesh) -> int:
+    """Parameter/optimizer/cache bytes per device implied by the shardings."""
+    import numpy as np
+
+    spec = input_specs(arch, shape_name, mesh)
+    total = 0
+
+    def add(tree):
+        nonlocal total
+        for sds in jax.tree_util.tree_leaves(tree):
+            shard_elems = np.prod(sds.sharding.shard_shape(sds.shape)) if sds.shape else 1
+            total += int(shard_elems) * sds.dtype.itemsize
+
+    add(spec["params"])
+    if "opt_state" in spec:
+        add(spec["opt_state"])
+    if "cache" in spec:
+        add(spec["cache"])
+    return total
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES), help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh (512 chips)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else [a.replace("_", "-") for a in ARCH_IDS]
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_case(arch, shape, multi_pod=mp)
+                    r = rec["roofline"]
+                    print(
+                        f"OK   {tag}: lower {rec['lower_s']}s compile {rec['compile_s']}s | "
+                        f"compute {r['compute_s']:.3e}s memory {r['memory_s']:.3e}s "
+                        f"collective {r['collective_s']:.3e}s -> {r['bottleneck']} | "
+                        f"useful {r['useful_ratio']:.2f} | "
+                        f"bytes/dev {rec['analytic_bytes_per_device']/2**30:.2f} GiB"
+                    )
+                    print(f"     memory_analysis: {rec['memory_analysis']}")
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": traceback.format_exc()[-2000:]}
+                    print(f"FAIL {tag}: {e}")
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                sys.stdout.flush()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,239 @@
+"""Loop-aware HLO accounting — the dry-run "profiler".
+
+`compiled.cost_analysis()` on the CPU backend counts each while-loop body
+ONCE, so a 94-layer `lax.scan` model under-reports FLOPs/bytes/collectives
+by ~94x (verified by microbenchmark). This module re-derives per-step,
+per-device totals from the optimized HLO text:
+
+  * parse every computation block, building a symbol table (value ->
+    result type) so operand shapes can be resolved;
+  * find `while` ops, read the trip count from the loop condition's s32
+    bound constant, and propagate multipliers (nested loops multiply);
+  * FLOPs: 2 * prod(result_dims) * prod(lhs contracting dims) per dot,
+    scaled by the loop multiplier (convolutions are absent in these models);
+  * bytes: operand + result bytes of top-level ops at fusion boundaries
+    (a proxy for HBM traffic, the same convention cost_analysis uses);
+  * collective bytes: result-shape bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, scaled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$"
+)
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems_total, bytes_total = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES[dtype]
+    return elems_total, bytes_total
+
+
+def _first_shape(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # args + attrs
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    ops: List[_Op]
+    symbols: Dict[str, str]  # value name -> result type
+
+
+def _parse_computations(hlo: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = _Comp(m.group(1), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = _Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.result_type
+        else:
+            # parameters: "%p.1 = s32[] parameter(0)" matches _OP_RE; tuples
+            # and odd forms that don't are rare and skippable.
+            pass
+    return comps
+
+
+def _trip_count(cond: _Comp) -> int:
+    consts = {}
+    for op in cond.ops:
+        if op.opcode == "constant" and op.result_type.replace(" ", "").startswith("s32[]"):
+            m = re.match(r"\(?(-?\d+)", op.rest)
+            if m:
+                consts[op.name] = int(m.group(1))
+    positive = [v for v in consts.values() if v > 0]
+    if len(positive) == 1:
+        return positive[0]
+    # look at compare/fusion ops touching a constant
+    for op in cond.ops:
+        if op.opcode in ("compare", "fusion"):
+            for name, val in consts.items():
+                if val > 0 and ("%" + name) in op.rest:
+                    return val
+            m = re.search(r"constant\((\d+)\)", op.rest)
+            if m:
+                return int(m.group(1))
+    if positive:
+        return max(positive)
+    return 1
+
+
+def _dot_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    result_elems, _ = _shape_elems_bytes(op.result_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    refs = _REF_RE.findall(op.rest.split("metadata")[0])
+    lhs_shape: List[int] = []
+    for r in refs:
+        if r in symbols:
+            lhs_shape = _first_shape(symbols[r])
+            break
+    if m is None or not lhs_shape:
+        return 2.0 * result_elems
+    contract = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs_shape):
+            contract *= lhs_shape[idx]
+    return 2.0 * result_elems * contract
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "while",
+    "conditional", "call",
+}
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    loops: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dot_count: float = 0.0
+
+    def add_collective(self, base: str, nbytes: float, mult: float) -> None:
+        d = self.collectives.setdefault(base, {"count": 0.0, "bytes": 0.0})
+        d["count"] += mult
+        d["bytes"] += nbytes * mult
+        self.collective_bytes += nbytes * mult
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = _parse_computations(hlo)
+    stats = HloStats()
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    entry = m.group(1) if m else None
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else None
+    if entry is None:
+        return stats
+
+    def operand_bytes_list(op: _Op, symbols: Dict[str, str]) -> List[int]:
+        out = []
+        args = op.rest.split("), ")[0]
+        for r in _REF_RE.findall(args):
+            t = symbols.get(r)
+            if t is not None:
+                _, b = _shape_elems_bytes(t)
+                out.append(b)
+        return out
+
+    def op_traffic(op: _Op, symbols: Dict[str, str]) -> float:
+        """Result + operand bytes; dynamic-update-slice (and fusions rooted
+        in one) update in place on TPU, so the aliased full buffer is not
+        traffic — only the updated slice moves (~= the smaller operands)."""
+        _, rbytes = _shape_elems_bytes(op.result_type)
+        ops_b = operand_bytes_list(op, symbols)
+        is_dus = "dynamic-update-slice" in op.opcode or (
+            "dynamic_update_slice" in op.rest or "dynamic-update-slice" in op.name
+        )
+        if is_dus and ops_b and rbytes == max(ops_b):
+            small = sum(ops_b) - max(ops_b)
+            return 2.0 * small  # read update + write slice in place
+        return rbytes + sum(ops_b)
+
+    def walk(comp_name: str, mult: float, count_bytes: bool) -> None:
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            code = op.opcode
+            if code == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trips = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb and mb.group(1) in comps:
+                    stats.loops[mb.group(1)] = trips
+                    walk(mb.group(1), mult * trips, count_bytes)
+                continue
+            base = None
+            for c in _COLLECTIVES:
+                if code == c or code == c + "-start":
+                    base = c
+                    break
+            if base is not None:
+                _, nbytes = _shape_elems_bytes(op.result_type)
+                stats.add_collective(base, nbytes, mult)
+            if code == "dot":
+                stats.flops += _dot_flops(op, comp.symbols) * mult
+                stats.dot_count += mult
+            if count_bytes and code not in _SKIP_BYTES_OPS:
+                stats.bytes += op_traffic(op, comp.symbols) * mult
+            if code in ("fusion", "call", "conditional", "map", "reduce", "sort"):
+                for attr in ("calls", "to_apply", "branch_computations"):
+                    for name in re.findall(attr + r"=\{?%?([\w.\-]+)", op.rest):
+                        if name in comps and name != comp_name:
+                            walk(name, mult, False)
+
+    walk(entry, 1.0, True)
+    return stats

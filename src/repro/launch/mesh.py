@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; callers control when devices are materialized.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data", "model"); 2 pods = 512 chips with a
+    leading "pod" axis. TPU v5e-256 pod topology."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has — used by examples and smoke runs."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

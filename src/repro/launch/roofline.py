@@ -1,0 +1,134 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (per step, per chip):
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+`compiled.cost_analysis()` reports the per-chip SPMD program's flops/bytes.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+sum the result-shape bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute. Hardware constants: TPU v5e — 197 TFLOP/s
+bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link (conservative single-link serialization)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# one shaped tensor, e.g. bf16[16,4096]{1,0} or f32[] or u32[2]{0:T(128)}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, Dict[str, float]]]:
+    """Sum result-shape bytes of every collective op in the HLO module.
+
+    Returns (total_bytes, per-op {count, bytes})."""
+    per_op: Dict[str, Dict[str, float]] = {
+        op: {"count": 0, "bytes": 0} for op in _COLLECTIVES
+    }
+    total = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        # normalize fused/start variants: all-gather-start, all-reduce-start...
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(type_str)
+        per_op[base]["count"] += 1
+        per_op[base]["bytes"] += nbytes
+        total += nbytes
+    return total, per_op
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per chip
+    hbm_bytes: float  # per chip
+    coll_bytes: float  # per chip
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float  # 6 N D (or 6 N_active D)
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_terms(
+    *,
+    flops: float,
+    hbm: float,
+    coll: float,
+    chips: int,
+    model_flops: float,
+) -> Roofline:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = flops * chips
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(coll),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+    )
+
+
+def analyze(cost: Dict[str, float], hlo_text: str, *, chips: int, model_flops: float) -> Roofline:
+    """Legacy path: raw cost_analysis values (loop bodies counted once)."""
+    coll, _ = collective_bytes(hlo_text)
+    return analyze_terms(
+        flops=float(cost.get("flops", 0.0) or 0.0),
+        hbm=float(cost.get("bytes accessed", 0.0) or 0.0),
+        coll=float(coll),
+        chips=chips,
+        model_flops=model_flops,
+    )

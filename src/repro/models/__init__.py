@@ -1,0 +1,19 @@
+from .model import (
+    abstract_params,
+    cache_shapes,
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+    prefill_forward,
+)
+
+__all__ = [
+    "abstract_params", "cache_shapes", "decode_step", "encode", "forward",
+    "init_cache", "init_params", "loss_fn", "param_shapes", "prefill",
+    "prefill_forward",
+]

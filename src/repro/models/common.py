@@ -1,0 +1,59 @@
+"""Shared model components: norms, RoPE, initializers, cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: [...]; returns cos/sin of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, Hd]; cos/sin: [..., S, Hd//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def dense_init(key: jax.Array, fan_in: int, shape: tuple, dtype=jnp.bfloat16) -> jax.Array:
+    scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, *, ignore_id: int = -1) -> jax.Array:
+    """Mean token-level CE in fp32. logits [..., V], targets [...] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (targets != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    from ..sharding.ctx import constrain
+
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    if h.ndim == 3:
+        h = constrain(h, "bsf")
+    return jnp.einsum("...f,fd->...d", h, w_down)

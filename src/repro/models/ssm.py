@@ -1,0 +1,240 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+`ssd_chunked` is the chunked train/prefill form (quadratic intra-chunk,
+linear inter-chunk recurrence); `ssd_recurrent_ref` is the step-by-step
+oracle used by tests; `ssd_step` is the O(1) decode update. The depthwise
+causal conv is expressed as a sum of shifts (kernel size 4), which XLA fuses
+cleanly and which keeps the decode conv-buffer logic transparent.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.ctx import constrain
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """a: (..., T). Returns (..., T, T) with out[i, j] = sum_{k=j+1..i} a_k
+    for i >= j, -inf above the diagonal."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (b, s, h, p) — pre-multiplied by dt
+    a: jax.Array,  # (b, s, h)    — dt * A (negative log-decay increments)
+    B: jax.Array,  # (b, s, n)
+    C: jax.Array,  # (b, s, n)
+    *,
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (b, h, p, n)
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    if use_pallas:
+        from repro.kernels.ssd_scan.ops import ssd_chunked as ssd_kernel
+
+        return ssd_kernel(x, a, B, C, chunk=chunk, initial_state=initial_state)
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        # pad with identity steps (x=0, B=0, a=0): state passes through
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        y, st = ssd_chunked(x, a, B, C, chunk=chunk, initial_state=initial_state)
+        return y[:, :s], st
+    c = s // chunk
+    xc = x.reshape(b, c, chunk, h, p)
+    ac = a.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    Bc = B.reshape(b, c, chunk, n)
+    Cc = C.reshape(b, c, chunk, n)
+
+    a_cs = jnp.cumsum(ac, axis=-1)  # (b,h,c,l)
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(segsum(ac))  # (b,h,c,l,l)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+    # 2. per-chunk end states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)  # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1])  # (b,h,c)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), dtype=x.dtype)
+
+    def scan_fn(carry, inp):
+        st_c, dec_c = inp  # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * dec_c[..., None, None].astype(carry.dtype) + st_c
+        return new, prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)  # (c,b,h,p,n)
+    decay_t = chunk_decay.transpose(2, 0, 1)  # (c,b,h)
+    final_state, states_prev = jax.lax.scan(
+        scan_fn, initial_state.astype(jnp.float32), (states_t.astype(jnp.float32), decay_t)
+    )
+    states_prev = states_prev.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+    # 4. state -> output contribution
+    state_decay_out = jnp.exp(a_cs)  # (b,h,c,l)
+    Y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", Cc, states_prev.astype(x.dtype), state_decay_out.astype(x.dtype)
+    )
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final_state.astype(x.dtype)
+
+
+def ssd_recurrent_ref(
+    x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+    initial_state: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Step-by-step oracle: h_t = exp(a_t) h_{t-1} + B_t x_t; y_t = C_t h_t."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(carry, t_in):
+        x_t, a_t, B_t, C_t = t_in
+        st = carry * jnp.exp(a_t).astype(jnp.float32)[..., None, None]
+        st = st + jnp.einsum("bhp,bn->bhpn", x_t.astype(jnp.float32), B_t.astype(jnp.float32))
+        y_t = jnp.einsum("bhpn,bn->bhp", st, C_t.astype(jnp.float32))
+        return st, y_t
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        a.transpose(1, 0, 2),
+        B.transpose(1, 0, 2),
+        C.transpose(1, 0, 2),
+    )
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)
+
+
+def ssd_step(
+    state: jax.Array,  # (b, h, p, n) fp32
+    x_t: jax.Array,  # (b, h, p) — pre-multiplied by dt
+    a_t: jax.Array,  # (b, h)    — dt * A
+    B_t: jax.Array,  # (b, n)
+    C_t: jax.Array,  # (b, n)
+) -> Tuple[jax.Array, jax.Array]:
+    state = state * jnp.exp(a_t.astype(jnp.float32))[..., None, None]
+    state = state + jnp.einsum("bhp,bn->bhpn", x_t.astype(jnp.float32), B_t.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    return state, y
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 mixer (in_proj -> conv -> SSD -> gate -> norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mixer_param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    di, N, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * N
+    return {
+        "ssm_in": (cfg.d_model, 2 * di + 2 * N + nh),
+        "ssm_conv_w": (cfg.ssm_conv, conv_dim),
+        "ssm_conv_b": (conv_dim,),
+        "ssm_dt_bias": (nh,),
+        "ssm_A_log": (nh,),
+        "ssm_D": (nh,),
+        "ssm_norm": (di,),
+        "ssm_out": (di, cfg.d_model),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, N, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    assert dt.shape[-1] == nh
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv as a sum of shifts. xBC: (b, s, c); w: (k, c)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(xBC)
+    for i in range(k):
+        shift = k - 1 - i
+        shifted = jnp.pad(xBC, ((0, 0), (shift, 0), (0, 0)))[:, : xBC.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + b)
+
+
+def mamba2_mixer(
+    cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+    *, initial_state: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Train/prefill mixer. x: (b, s, D) -> (y (b, s, D), final_state,
+    conv_tail (b, conv-1, conv_dim) — the decode conv buffer)."""
+    b, s, _ = x.shape
+    di, N, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["ssm_in"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    z = constrain(z, "bsf")
+    xBC = constrain(xBC, "bsf")
+    tail = cfg.ssm_conv - 1
+    pad_raw = jnp.pad(xBC, ((0, 0), (tail, 0), (0, 0)))
+    conv_tail = pad_raw[:, pad_raw.shape[1] - tail :, :]
+    xBC = _causal_conv(xBC, p["ssm_conv_w"], p["ssm_conv_b"])
+    xs = xBC[..., :di].reshape(b, s, nh, hd)
+    B = xBC[..., di : di + N]
+    C = xBC[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["ssm_dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["ssm_A_log"].astype(jnp.float32))
+    a = (dt * A).astype(x.dtype)  # (b,s,nh)
+    x_dt = xs * dt.astype(x.dtype)[..., None]
+    y, final_state = ssd_chunked(x_dt, a, B, C, chunk=cfg.ssm_chunk,
+                                 initial_state=initial_state,
+                                 use_pallas=cfg.use_pallas)
+    y = y + xs * p["ssm_D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    from .common import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["ssm_out"]), final_state, conv_tail
+
+
+def mamba2_mixer_step(
+    cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+    conv_buf: jax.Array, state: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode mixer. x: (b, 1, D); conv_buf: (b, k-1, conv_dim);
+    state: (b, nh, hd, N) fp32. Returns (y (b,1,D), conv_buf', state')."""
+    b = x.shape[0]
+    di, N, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["ssm_in"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = xBC[:, 0]  # (b, conv_dim)
+    window = jnp.concatenate([conv_buf.astype(xBC.dtype), xBC[:, None, :]], axis=1)  # (b, k, c)
+    conv = jnp.einsum("bkc,kc->bc", window, p["ssm_conv_w"]) + p["ssm_conv_b"]
+    conv = jax.nn.silu(conv)
+    new_buf = window[:, 1:].astype(conv_buf.dtype)
+    xs = conv[:, :di].reshape(b, nh, hd)
+    B = conv[:, di : di + N]
+    C = conv[:, di + N :]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["ssm_dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["ssm_A_log"].astype(jnp.float32))
+    a_t = dt1 * A  # (b, nh)
+    x_dt = xs * dt1.astype(xs.dtype)[..., None]
+    state, y = ssd_step(state, x_dt, a_t, B, C)
+    y = y.astype(x.dtype) + xs * p["ssm_D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    from .common import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["ssm_out"]), new_buf, state

@@ -1,0 +1,14 @@
+from .checkpoint_engine import CheckpointEngine, UpdateResult
+from .disagg import DisaggregatedServer, monolithic_generate
+from .hicache import FetchResult, HiCache
+from .kvcache import PagePool, kv_bytes_per_token, make_cpu_pool, make_disk_pool, make_gpu_pool
+from .perf_model import PerfModel, from_roofline, from_table2
+from .serve_sim import ServeSimConfig, ServeStats, ServingSimulator
+
+__all__ = [
+    "CheckpointEngine", "UpdateResult", "DisaggregatedServer",
+    "monolithic_generate", "FetchResult", "HiCache", "PagePool",
+    "kv_bytes_per_token", "make_cpu_pool", "make_disk_pool", "make_gpu_pool",
+    "PerfModel", "from_roofline", "from_table2", "ServeSimConfig",
+    "ServeStats", "ServingSimulator",
+]

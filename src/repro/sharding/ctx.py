@@ -1,0 +1,106 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher activates this context and the
+model's `constrain(x, kind)` calls become GSPMD sharding constraints that
+pin activations to the megatron-style layout (batch over data axes, hidden
+"wide" dims over model). Without constraints the partitioner is free to
+all-gather full-batch activations against FSDP-sharded weights — the
+pathological layout the §Perf baseline measures.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _cur():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, enabled: bool = True):
+    """Enable activation constraints for everything traced inside."""
+    batch = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    prev = _cur()
+    _state.ctx = {
+        "mesh": mesh,
+        "batch": batch if len(batch) != 1 else batch[0],
+        "model": "model" if "model" in mesh.shape else None,
+        "enabled": enabled,
+    }
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _wsc(x, spec: P):
+    ctx = _cur()
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx["mesh"], spec))
+
+
+def constrain(x, kind: str):
+    """Apply the layout rule `kind` if a sharding context is active.
+
+    kinds:
+      bsd      (B, S, D) residual stream        -> (batch, None, None)
+      bsf      (B, S, F) ffn/inner hidden       -> (batch, None, model)
+      bshd     (B, S, H, hd) attention heads    -> (batch, None, model, None)
+      logits   (B, S, V) or (B, V)              -> (batch, ..., model)
+      ecd      (E, C, D) expert buckets         -> (model, None, None)
+      lbskd    (L, B, W, K, hd) kv cache blocks -> (None, batch, None, model, None)
+    """
+    ctx = _cur()
+    if ctx is None or not ctx["enabled"]:
+        return x
+    b, m = ctx["batch"], ctx["model"]
+    if kind == "bsd":
+        spec = P(b, None, None)
+    elif kind == "bsf":
+        spec = P(b, None, m)
+    elif kind == "bshd":
+        spec = P(b, None, m, None)
+    elif kind == "logits":
+        spec = P(*([b] + [None] * (x.ndim - 2) + [m]))
+    elif kind == "ecd":
+        spec = P(m, None, None)
+    elif kind == "bhst":
+        spec = P(b, m, None, None)
+    elif kind == "lbskd":
+        spec = P(None, b, None, m, None)
+    elif kind == "cache_kv":
+        # (B, W, K, Hd) collected decode-cache block: prefer sharding KV
+        # heads over model; MQA/GQA below mesh size shard the length instead
+        # (mirrors sharding.rules.cache_partition_specs).
+        K = x.shape[2]
+        msize = mesh_size = 1
+        if m is not None:
+            mesh_size = ctx["mesh"].shape[m]
+        if m is not None and K % mesh_size == 0:
+            spec = P(b, None, m, None)
+        elif m is not None and x.shape[1] % mesh_size == 0:
+            spec = P(b, m, None, None)
+        else:
+            spec = P(b, None, None, None)
+    else:
+        raise ValueError(f"unknown constraint kind {kind!r}")
+    # divisibility guard: drop axes that don't divide
+    mesh = ctx["mesh"]
+
+    def ok(axis, dim):
+        if axis is None:
+            return None
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        return axis if dim % total == 0 else None
+
+    spec = P(*(ok(a, d) for a, d in zip(spec, x.shape)))
+    return _wsc(x, spec)

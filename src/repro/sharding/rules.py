@@ -1,0 +1,148 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+Policy (GSPMD-propagated from in_shardings + a few constraints):
+
+  * weights are 2-D sharded: the "wide" axis (heads / ffn / experts / vocab)
+    over `model`, the d_model (or stacked) axis over `data` (FSDP-style) —
+    so even 132B/235B configs fit 16 GB/chip with optimizer state;
+  * batch shards over (`pod`, `data`); sequence stays unsharded (decode KV
+    ring buffers and SSD chunk scans keep locality);
+  * KV heads shard over `model` only when divisible (granite's MQA kv=1
+    replicates); MoE experts shard over `model` (expert parallelism);
+  * optimizer moments follow their parameters.
+
+An axis is dropped (replicated) whenever its size doesn't divide the mesh
+axis — jax pads otherwise, which burns memory at 512 devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str]) -> bool:
+    return axis is not None and axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def _maybe(axis: Optional[str], size: int, mesh: Mesh) -> Optional[str]:
+    return axis if _div(size, mesh, axis) else None
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _wide_spec(shape: tuple, mesh: Mesh, *, wide_axis: int, fsdp_axis: Optional[int],
+               fsdp: bool) -> P:
+    """Shard shape[wide_axis] over model, shape[fsdp_axis] over data."""
+    spec: list = [None] * len(shape)
+    if _div(shape[wide_axis], mesh, "model"):
+        spec[wide_axis] = "model"
+    if fsdp and fsdp_axis is not None and _div(shape[fsdp_axis], mesh, "data"):
+        spec[fsdp_axis] = "data"
+    return P(*spec)
+
+
+def param_partition_specs(
+    cfg: ModelConfig, mesh: Mesh, shapes: Dict[str, Any], *, fsdp: bool = True
+) -> Dict[str, Any]:
+    """PartitionSpec pytree matching param_shapes(cfg)'s structure."""
+
+    def leaf_spec(key_path: str, shape: tuple) -> P:
+        name = key_path.split("/")[-1]
+        nd = len(shape)
+        # embeddings / lm head: vocab over model, d_model over data
+        if name == "embed":
+            return _wide_spec(shape, mesh, wide_axis=0, fsdp_axis=1, fsdp=fsdp)
+        if name == "lm_head":
+            return _wide_spec(shape, mesh, wide_axis=1, fsdp_axis=0, fsdp=fsdp)
+        # stacked layer tensors: axis 0 = layer (never sharded)
+        if name in ("ln1", "ln2", "lnx", "final_norm", "ssm_norm", "ssm_A_log",
+                    "ssm_D", "ssm_dt_bias", "ssm_conv_b", "bq", "bk", "bv"):
+            return P()
+        if name == "ssm_conv_w":
+            return P()
+        if name in ("wq", "wk", "wv", "xwq", "xwk", "xwv"):  # (L, D, heads*hd)
+            return _wide_spec(shape, mesh, wide_axis=nd - 1, fsdp_axis=nd - 2, fsdp=fsdp)
+        if name in ("wo", "xwo"):  # (L, heads*hd, D)
+            return _wide_spec(shape, mesh, wide_axis=nd - 2, fsdp_axis=nd - 1, fsdp=fsdp)
+        if name == "router":  # (L, D, E): replicate E (tiny), fsdp D
+            spec = [None] * nd
+            if fsdp and _div(shape[nd - 2], mesh, "data"):
+                spec[nd - 2] = "data"
+            return P(*spec)
+        if name in ("w_gate", "w_up"):
+            if cfg.num_experts > 0 and nd == 4:  # (L, E, D, F): expert parallel
+                return _wide_spec(shape, mesh, wide_axis=1, fsdp_axis=3, fsdp=fsdp)
+            return _wide_spec(shape, mesh, wide_axis=nd - 1, fsdp_axis=nd - 2, fsdp=fsdp)
+        if name == "w_down":
+            if cfg.num_experts > 0 and nd == 4:  # (L, E, F, D)
+                return _wide_spec(shape, mesh, wide_axis=1, fsdp_axis=2, fsdp=fsdp)
+            return _wide_spec(shape, mesh, wide_axis=nd - 2, fsdp_axis=nd - 1, fsdp=fsdp)
+        if name == "ssm_in":  # (L, D, 2di+2N+nh): inner dim over model
+            return _wide_spec(shape, mesh, wide_axis=nd - 1, fsdp_axis=nd - 2, fsdp=fsdp)
+        if name == "ssm_out":  # (L, di, D)
+            return _wide_spec(shape, mesh, wide_axis=nd - 2, fsdp_axis=nd - 1, fsdp=fsdp)
+        return P()
+
+    def walk(tree: Any, prefix: str = "") -> Any:
+        if isinstance(tree, dict):
+            return {k: walk(v, prefix + k + "/") for k, v in tree.items()}
+        return leaf_spec(prefix.rstrip("/"), tree)
+
+    return walk(shapes)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, shapes: Dict[str, Any], *, fsdp: bool = True):
+    specs = param_partition_specs(cfg, mesh, shapes, fsdp=fsdp)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = batch_axes(mesh)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def cache_partition_specs(cfg: ModelConfig, mesh: Mesh, cache_shapes: Dict[str, Any]) -> Dict[str, P]:
+    """Decode cache: (L, B, ...) — batch over (pod, data), kv-heads/ssm-heads
+    over model when divisible."""
+    baxes = batch_axes(mesh)
+    out: Dict[str, P] = {}
+    for name, sds in cache_shapes.items():
+        shape = sds.shape
+        B = shape[1]
+        bshard = baxes if B % int(np.prod([mesh.shape[a] for a in baxes])) == 0 else (
+            baxes[-1] if baxes and B % mesh.shape[baxes[-1]] == 0 else None
+        )
+        b = bshard if bshard else None
+        if name in ("k", "v", "enc_k", "enc_v"):  # (L, B, W, K, Hd)
+            kv = "model" if _div(shape[3], mesh, "model") else None
+            # MQA/GQA with kv_heads < mesh: shard the cache LENGTH instead —
+            # keeps e.g. granite's kv=1 32k cache at W/16 per chip.
+            wshard = "model" if kv is None and _div(shape[2], mesh, "model") else None
+            out[name] = P(None, b, wshard, kv, None)
+        elif name == "ssm_state":  # (L, B, nh, hd, N)
+            heads = "model" if _div(shape[2], mesh, "model") else None
+            out[name] = P(None, b, heads, None, None)
+        elif name == "conv_buf":  # (L, B, k-1, dim)
+            dim = "model" if _div(shape[3], mesh, "model") else None
+            out[name] = P(None, b, None, dim)
+        else:
+            out[name] = P()
+    return out
+
+
+def opt_state_specs(param_specs: Dict[str, Any]) -> Dict[str, Any]:
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }

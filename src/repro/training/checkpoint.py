@@ -1,0 +1,77 @@
+"""Checkpointing: pytree <-> flat tensor table <-> disk / TENT segments.
+
+`flatten_state` produces the named-tensor table that both the disk format
+and the TENT checkpoint engine operate on — a checkpoint *is* a set of
+segments, which is exactly how the paper's RL weight-update pipeline views
+it (Moonshot Checkpoint Engine §5.1.2)."""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def flatten_state(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = prefix + "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def unflatten_like(tree: Any, table: Dict[str, np.ndarray], prefix: str = "") -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        key = prefix + "/".join(_path_str(p) for p in path)
+        arr = table[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(path: str, params: Any, opt_state: Any | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    table = flatten_state(params, "params/")
+    if opt_state is not None:
+        table.update(flatten_state(opt_state, "opt/"))
+    # bf16 isn't npz-native; view as uint16 with a dtype side-channel
+    packed = {}
+    for k, v in table.items():
+        if v.dtype.name == "bfloat16":
+            packed[k] = v.view(np.uint16)
+            packed[k + "::dtype"] = np.asarray("bfloat16")
+        else:
+            packed[k] = v
+    np.savez(path, **packed)
+
+
+def load_checkpoint(path: str, params_like: Any, opt_like: Any | None = None):
+    import jax.numpy as jnp
+
+    raw = np.load(path, allow_pickle=False)
+    table: Dict[str, np.ndarray] = {}
+    for k in raw.files:
+        if k.endswith("::dtype"):
+            continue
+        v = raw[k]
+        if k + "::dtype" in raw.files:
+            v = v.view(jnp.bfloat16)
+        table[k] = v
+    params = unflatten_like(params_like, table, "params/")
+    if opt_like is not None:
+        opt = unflatten_like(opt_like, table, "opt/")
+        return params, opt
+    return params

@@ -1,0 +1,71 @@
+"""Single-host training loop used by examples and smoke-scale runs.
+
+The production multi-pod path lowers the same `make_train_step` under the
+mesh + sharding rules (see launch/dryrun.py); this loop drives it on
+whatever devices exist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import init_params, loss_fn
+from .data import DataConfig, SyntheticTokens
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        params, opt_state, opt_aux = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **aux, **opt_aux}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    tokens_per_sec: float
+
+
+def train(
+    cfg: ModelConfig,
+    *,
+    steps: int = 50,
+    batch_size: int = 4,
+    seq_len: int = 128,
+    seed: int = 0,
+    opt_cfg: Optional[AdamWConfig] = None,
+    log_every: int = 10,
+    log: Callable[[str], None] = print,
+) -> TrainResult:
+    opt_cfg = opt_cfg or AdamWConfig(warmup_steps=max(steps // 10, 1), total_steps=steps)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params)
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, seq_len, batch_size, seed=seed))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    losses = []
+    t0 = time.perf_counter()
+    it = iter(data)
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        if cfg.is_encdec:
+            batch["enc_frames"] = jax.random.normal(
+                jax.random.PRNGKey(step), (batch_size, seq_len // 4, cfg.d_model), jnp.bfloat16
+            )
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0:
+            log(f"step {step:4d}  loss {loss:.4f}  gnorm {float(metrics['grad_norm']):.3f}")
+    dt = time.perf_counter() - t0
+    return TrainResult(losses=losses, steps=steps, tokens_per_sec=steps * batch_size * seq_len / dt)

@@ -1,0 +1,202 @@
+"""End-to-end behaviour tests for the TENT engine on the simulated fabric."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchState,
+    EngineConfig,
+    FabricSpec,
+    Location,
+    MemoryKind,
+    TentEngine,
+)
+
+
+def _rand(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 256, size=n, dtype=np.uint8)
+
+
+def host_loc(node, numa=0):
+    return Location(node=node, kind=MemoryKind.HOST_DRAM, device=numa, numa=numa)
+
+
+def gpu_loc(node, gpu, spec=None):
+    numa = (spec or FabricSpec()).node.gpu_numa(gpu)
+    return Location(node=node, kind=MemoryKind.DEVICE_HBM, device=gpu, numa=numa)
+
+
+class TestDataIntegrity:
+    def test_host_to_host_cross_node(self):
+        eng = TentEngine(FabricSpec())
+        n = 8 * 1024 * 1024
+        payload = _rand(n)
+        src = eng.register_segment(host_loc(0), n)
+        dst = eng.register_segment(host_loc(1), n)
+        src.write(0, payload)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok
+        np.testing.assert_array_equal(dst.read(0, n), payload)
+
+    def test_partial_offsets(self):
+        eng = TentEngine(FabricSpec())
+        src = eng.register_segment(host_loc(0), 1 << 20)
+        dst = eng.register_segment(host_loc(1), 1 << 20)
+        payload = _rand(100_000, seed=3)
+        src.write(7777, payload)
+        res = eng.transfer_sync(src.segment_id, 7777, dst.segment_id, 31337, 100_000)
+        assert res.ok
+        np.testing.assert_array_equal(dst.read(31337, 100_000), payload)
+
+    def test_gpu_to_gpu_intra_node_uses_nvlink(self):
+        eng = TentEngine(FabricSpec())
+        n = 32 * 1024 * 1024
+        src = eng.register_segment(gpu_loc(0, 0), n)
+        dst = eng.register_segment(gpu_loc(0, 5), n)
+        payload = _rand(n, seed=1)
+        src.write(0, payload)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok
+        np.testing.assert_array_equal(dst.read(0, n), payload)
+        nvlink = eng.topology.nvlink(0, 0)
+        assert eng.fabric.link(nvlink.link_id).bytes_completed >= n
+
+    def test_staged_route_without_gpudirect(self):
+        spec = FabricSpec(has_gpudirect=False, has_nvlink=True)
+        eng = TentEngine(spec)
+        n = 4 * 1024 * 1024
+        src = eng.register_segment(gpu_loc(0, 0, spec), n)
+        dst = eng.register_segment(gpu_loc(1, 0, spec), n)
+        plan = eng.orchestrator.resolve(src, dst)
+        assert len(plan.current.stages) == 3  # D2H -> H2H -> H2D
+        assert plan.current.backend_names == ["pcie", "rdma", "pcie"]
+        payload = _rand(n, seed=2)
+        src.write(0, payload)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok
+        np.testing.assert_array_equal(dst.read(0, n), payload)
+
+    def test_file_to_gpu(self):
+        eng = TentEngine(FabricSpec())
+        n = 1 << 20
+        src = eng.register_segment(Location(node=0, kind=MemoryKind.FILE), n)
+        dst = eng.register_segment(gpu_loc(0, 1), n)
+        payload = _rand(n, seed=9)
+        src.write(0, payload)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok
+        np.testing.assert_array_equal(dst.read(0, n), payload)
+
+
+class TestSpraying:
+    def test_host_elephant_flow_uses_multiple_rails(self):
+        eng = TentEngine(FabricSpec())
+        n = 256 * 1024 * 1024
+        src = eng.register_segment(host_loc(0), n)
+        dst = eng.register_segment(host_loc(1), n)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok
+        used = [
+            l.desc.name
+            for l in eng.fabric.links.values()
+            if l.bytes_completed > 0 and l.desc.link_class.value == "rdma" and l.desc.node == 0
+        ]
+        assert len(used) >= 4, f"expected multi-rail spray, got {used}"
+
+    def test_gpu_large_block_recruits_tier2(self):
+        # Paper §5.1.3: tier-1 NIC dominates small blocks; large blocks
+        # spill over onto same-NUMA tier-2 NICs.
+        spec = FabricSpec()
+        eng = TentEngine(spec)
+        n = 512 * 1024 * 1024
+        src = eng.register_segment(gpu_loc(0, 0, spec), n)
+        dst = eng.register_segment(gpu_loc(1, 0, spec), n)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok
+        tier1 = eng.topology.rdma_nic(0, spec.node.tier1_nic(0))
+        t1_bytes = eng.fabric.link(tier1.link_id).bytes_completed
+        rdma_total = sum(
+            l.bytes_completed
+            for l in eng.fabric.links.values()
+            if l.desc.link_class.value == "rdma" and l.desc.node == 0
+        )
+        assert rdma_total >= n
+        assert 0 < t1_bytes < rdma_total  # tier-2 rails recruited
+        # tier-3 (cross-NUMA from GPU0) rails must stay cold (penalty inf)
+        for nic in eng.topology.rdma_nics(0):
+            if eng.topology.nic_tier(src.location, nic) == 3:
+                assert eng.fabric.link(nic.link_id).bytes_completed == 0
+
+
+class TestResilience:
+    def test_failure_midtransfer_recovers(self):
+        spec = FabricSpec()
+        eng = TentEngine(spec)
+        n = 128 * 1024 * 1024
+        src = eng.register_segment(host_loc(0), n)
+        dst = eng.register_segment(host_loc(1), n)
+        payload = _rand(n, seed=4)
+        src.write(0, payload)
+        # Fail one NIC shortly after the transfer starts, recover later.
+        nic = eng.topology.rdma_nic(0, 0)
+        eng.fabric.schedule_failure(nic.link_id, at=0.0002, recover_at=0.5)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok, res.error
+        np.testing.assert_array_equal(dst.read(0, n), payload)
+        assert eng.slices_retried > 0
+
+    def test_all_rdma_down_substitutes_tcp(self):
+        spec = FabricSpec()
+        eng = TentEngine(spec)
+        n = 2 * 1024 * 1024
+        src = eng.register_segment(host_loc(0), n)
+        dst = eng.register_segment(host_loc(1), n)
+        payload = _rand(n, seed=5)
+        src.write(0, payload)
+        for nic in eng.topology.rdma_nics(0):
+            eng.fabric.schedule_failure(nic.link_id, at=0.0, recover_at=1e9)
+        for nic in eng.topology.rdma_nics(1):
+            eng.fabric.schedule_failure(nic.link_id, at=0.0, recover_at=1e9)
+        res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+        assert res.ok, res.error
+        assert eng.backend_substitutions > 0
+        np.testing.assert_array_equal(dst.read(0, n), payload)
+        tcp = eng.topology.tcp(0)
+        assert eng.fabric.link(tcp.link_id).bytes_completed >= n
+
+
+class TestPolicyComparison:
+    def test_tent_beats_round_robin_on_degraded_fabric(self):
+        # Paper Fig. 2 / §2.2: a degraded rail drags RR's whole transfer;
+        # TENT steers slices away from it.
+        results = {}
+        for policy in ("tent", "round_robin"):
+            eng = TentEngine(FabricSpec(), config=EngineConfig(policy=policy), seed=11)
+            n = 256 * 1024 * 1024
+            src = eng.register_segment(host_loc(0), n)
+            dst = eng.register_segment(host_loc(1), n)
+            nic = eng.topology.rdma_nic(0, 1)
+            eng.fabric.schedule_degradation(nic.link_id, at=0.0, until=1e9, factor=0.12)
+            res = eng.transfer_sync(src.segment_id, 0, dst.segment_id, 0, n)
+            assert res.ok
+            results[policy] = res.throughput
+        assert results["tent"] > 1.15 * results["round_robin"], results
+
+
+class TestBatchSemantics:
+    def test_multi_transfer_batch_single_completion(self):
+        eng = TentEngine(FabricSpec())
+        n = 1 << 20
+        segs = []
+        for i in range(4):
+            s = eng.register_segment(host_loc(0), n)
+            d = eng.register_segment(host_loc(1), n)
+            s.write(0, _rand(n, seed=i))
+            segs.append((s, d))
+        b = eng.allocate_batch()
+        eng.submit_transfer(b, [(s.segment_id, 0, d.segment_id, 0, n) for s, d in segs])
+        state, remaining = eng.get_transfer_status(b)
+        assert state == BatchState.SUBMITTED and remaining > 0
+        res = eng.wait(b)
+        assert res.ok and res.bytes == 4 * n
+        for s, d in segs:
+            np.testing.assert_array_equal(d.read(0, n), s.read(0, n))

@@ -1,0 +1,143 @@
+"""Per-kernel correctness: shape/dtype sweeps, assert_allclose vs the
+pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.kv_pack import kv_pack, kv_pack_ref, kv_unpack, kv_unpack_ref
+from repro.kernels.ssd_scan import ssd_chunked as ssd_kernel
+from repro.kernels.ssd_scan import ssd_scan_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-3, atol=2e-3)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,S,H,K,D",
+        [
+            (1, 128, 4, 4, 64),  # MHA
+            (2, 256, 8, 2, 64),  # GQA 4:1
+            (1, 128, 4, 1, 128),  # MQA, wide head
+            (1, 200, 4, 2, 64),  # non-block-multiple seq (padding path)
+        ],
+    )
+    def test_causal_matches_ref(self, dtype, B, S, H, K, D):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+        k = jax.random.normal(ks[1], (B, S, K, D), dtype)
+        v = jax.random.normal(ks[2], (B, S, K, D), dtype)
+        out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+
+    @pytest.mark.parametrize("window", [16, 64])
+    def test_sliding_window_matches_ref(self, window):
+        B, S, H, K, D = 1, 256, 4, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, K, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, K, D), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window, block_q=64, block_k=64)
+        ref = flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+    def test_matches_model_attention(self):
+        """The kernel must agree with the model's attend_full path."""
+        from repro.models.attention import attend_full
+
+        B, S, H, K, D = 2, 128, 8, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, K, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, K, D), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        ref = attend_full(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+class TestSSDScanKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,S,H,P,N,chunk",
+        [
+            (1, 128, 2, 16, 32, 32),
+            (2, 256, 4, 64, 128, 64),
+            (1, 100, 2, 16, 32, 32),  # padding path
+        ],
+    )
+    def test_matches_recurrent_ref(self, dtype, B, S, H, P, N, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = (jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.5).astype(dtype)
+        a = (-jnp.abs(jax.random.normal(ks[1], (B, S, H), jnp.float32)) * 0.3).astype(dtype)
+        Bm = (jax.random.normal(ks[2], (B, S, N), jnp.float32) * 0.5).astype(dtype)
+        Cm = (jax.random.normal(ks[3], (B, S, N), jnp.float32) * 0.5).astype(dtype)
+        y, fin = ssd_kernel(x, a, Bm, Cm, chunk=chunk)
+        y_ref, fin_ref = ssd_scan_ref(x, a, Bm, Cm)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **_tol(dtype)
+        )
+        np.testing.assert_allclose(
+            np.asarray(fin, np.float32), np.asarray(fin_ref, np.float32), **_tol(dtype)
+        )
+
+    def test_matches_model_ssd(self):
+        """Kernel vs the model's chunked jnp implementation."""
+        from repro.models.ssm import ssd_chunked as ssd_jnp
+
+        B, S, H, P, N = 1, 128, 2, 32, 64
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.5
+        a = -jnp.abs(jax.random.normal(ks[1], (B, S, H), jnp.float32)) * 0.3
+        Bm = jax.random.normal(ks[2], (B, S, N), jnp.float32) * 0.5
+        Cm = jax.random.normal(ks[3], (B, S, N), jnp.float32) * 0.5
+        y_k, fin_k = ssd_kernel(x, a, Bm, Cm, chunk=32)
+        y_j, fin_j = ssd_jnp(x, a, Bm, Cm, chunk=32)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_j), rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(
+            np.asarray(fin_k, np.float32), np.asarray(fin_j, np.float32), rtol=2e-3, atol=2e-3
+        )
+
+    def test_initial_state(self):
+        B, S, H, P, N = 1, 64, 2, 16, 32
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.5
+        a = -jnp.abs(jax.random.normal(ks[1], (B, S, H), jnp.float32)) * 0.3
+        Bm = jax.random.normal(ks[2], (B, S, N), jnp.float32) * 0.5
+        Cm = jax.random.normal(ks[3], (B, S, N), jnp.float32) * 0.5
+        s0 = jax.random.normal(ks[4], (B, H, P, N), jnp.float32)
+        y, fin = ssd_kernel(x, a, Bm, Cm, chunk=32, initial_state=s0)
+        y_ref, fin_ref = ssd_scan_ref(x, a, Bm, Cm, initial_state=s0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref), rtol=2e-3, atol=2e-3)
+
+
+class TestKvPack:
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    @pytest.mark.parametrize("pages,page,dim,n", [(32, 16, 128, 8), (64, 8, 256, 64)])
+    def test_pack_matches_ref(self, dtype, pages, page, dim, n):
+        pool = jax.random.normal(jax.random.PRNGKey(0), (pages, page, dim), dtype)
+        idx = jax.random.permutation(jax.random.PRNGKey(1), pages)[:n].astype(jnp.int32)
+        out = kv_pack(pool, idx)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(kv_pack_ref(pool, idx)))
+
+    def test_unpack_matches_ref(self):
+        pool = jax.random.normal(jax.random.PRNGKey(0), (32, 16, 128), jnp.float32)
+        buf = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 128), jnp.float32)
+        idx = jax.random.permutation(jax.random.PRNGKey(2), 32)[:8].astype(jnp.int32)
+        ref = kv_unpack_ref(pool, buf, idx)
+        out = kv_unpack(pool.copy(), buf, idx)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_roundtrip(self):
+        pool = jax.random.normal(jax.random.PRNGKey(3), (16, 8, 128), jnp.bfloat16)
+        idx = jnp.asarray([3, 7, 1, 9], jnp.int32)
+        buf = kv_pack(pool, idx)
+        restored = kv_unpack(jnp.zeros_like(pool), buf, idx)
+        np.testing.assert_array_equal(np.asarray(restored[idx]), np.asarray(pool[idx]))

@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Candidate,
+    FabricSpec,
+    Location,
+    MemoryKind,
+    TentEngine,
+    TentPolicy,
+    TransferRequest,
+    decompose,
+    tent_choose_jnp,
+)
+from repro.core.telemetry import LinkTelemetry
+from repro.core.topology import LinkDesc
+from repro.core.types import LinkClass
+
+
+def _mk_tl(link_id, bw=25e9, queued=0, beta0=0.0, beta1=1.0, excluded=False):
+    desc = LinkDesc(link_id=link_id, node=0, link_class=LinkClass.RDMA,
+                    index=link_id, numa=0, bandwidth=bw, base_latency=5e-6)
+    tl = LinkTelemetry(desc=desc, beta0=beta0, beta0_prior=beta0, beta1=beta1)
+    tl.queued_bytes = queued
+    tl.excluded = excluded
+    return tl
+
+
+class TestSliceDecomposition:
+    @given(
+        length=st.integers(1, 1 << 30),
+        src_off=st.integers(0, 1 << 20),
+        dst_off=st.integers(0, 1 << 20),
+        slice_bytes=st.sampled_from([4096, 65536, 1 << 20]),
+        max_slices=st.sampled_from([1, 7, 64, 512]),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_exact_tiling(self, length, src_off, dst_off, slice_bytes, max_slices):
+        req = TransferRequest(
+            transfer_id=1, src_segment=1, src_offset=src_off,
+            dst_segment=2, dst_offset=dst_off, length=length,
+        )
+        slices = decompose(req, 1, slice_bytes=slice_bytes, max_slices=max_slices)
+        # count bound
+        assert 1 <= len(slices) <= max_slices
+        # exact, ordered, non-overlapping tiling of [0, length)
+        cur_src, cur_dst = src_off, dst_off
+        for sl in slices:
+            assert sl.src_offset == cur_src and sl.dst_offset == cur_dst
+            assert sl.length > 0
+            # src/dst offset correspondence preserved
+            assert sl.src_offset - src_off == sl.dst_offset - dst_off
+            cur_src += sl.length
+            cur_dst += sl.length
+        assert cur_src - src_off == length
+
+
+class TestSchedulerInvariants:
+    @given(
+        queues=st.lists(st.integers(0, 1 << 30), min_size=2, max_size=8),
+        tiers=st.lists(st.sampled_from([1, 2]), min_size=2, max_size=8),
+        length=st.integers(1, 1 << 24),
+        gamma=st.floats(0.0, 0.5),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_choice_is_within_tolerance_window(self, queues, tiers, length, gamma):
+        n = min(len(queues), len(tiers))
+        cands = [Candidate(_mk_tl(i, queued=queues[i]), tiers[i]) for i in range(n)]
+        policy = TentPolicy(gamma=gamma)
+        chosen = policy.choose(cands, length)
+        # recompute scores as they were at choice time (chosen was charged)
+        scores = []
+        for c in cands:
+            q = c.telemetry.queued_bytes - (length if c is chosen else 0)
+            t_hat = c.telemetry.beta0 + c.telemetry.beta1 * (q + length) / c.telemetry.desc.bandwidth
+            scores.append({1: 1.0, 2: 3.0}[c.tier] * t_hat)
+        s_min = min(scores)
+        s_chosen = scores[cands.index(chosen)]
+        assert s_chosen <= (1 + gamma) * s_min * (1 + 1e-9)
+
+    @given(
+        queues=st.lists(st.integers(0, 1 << 28), min_size=2, max_size=8),
+        length=st.integers(1, 1 << 22),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_queue_accounting_monotonic(self, queues, length):
+        cands = [Candidate(_mk_tl(i, queued=q), 1) for i, q in enumerate(queues)]
+        policy = TentPolicy()
+        before = sum(c.telemetry.queued_bytes for c in cands)
+        policy.choose(cands, length)
+        after = sum(c.telemetry.queued_bytes for c in cands)
+        assert after == before + length  # Algorithm 1 line 11
+
+    @given(
+        queues=st.lists(st.integers(0, 1 << 28), min_size=2, max_size=8),
+        length=st.integers(1, 1 << 22),
+        rr=st.integers(0, 100),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_jnp_scorer_matches_python(self, queues, length, rr):
+        import jax.numpy as jnp
+
+        n = len(queues)
+        cands = [Candidate(_mk_tl(i, queued=q), 1) for i, q in enumerate(queues)]
+        policy = TentPolicy()
+        s_py = policy.scores(cands, length)
+        idx = tent_choose_jnp(
+            jnp.asarray(queues, jnp.float32), jnp.full((n,), 25e9, jnp.float32),
+            jnp.zeros((n,)), jnp.ones((n,)), jnp.ones((n,)), float(length), rr,
+        )
+        # the jnp choice must land inside the python tolerance window
+        s_min = min(s_py)
+        assert s_py[int(idx)] <= 1.05 * s_min * (1 + 1e-6)
+
+
+class TestEwmaBounded:
+    @given(
+        obs=st.lists(st.floats(1e-7, 10.0), min_size=1, max_size=50),
+        length=st.integers(1, 1 << 24),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_beta_stays_positive_finite(self, obs, length):
+        tl = _mk_tl(0)
+        for t_obs in obs:
+            tl.on_schedule(length)
+            tl.on_complete(length, tl.queued_bytes + length, t_obs)
+            assert np.isfinite(tl.beta0) and tl.beta0 >= 0
+            assert np.isfinite(tl.beta1) and 0.05 <= tl.beta1 <= 1e4
+            assert tl.queued_bytes >= 0
+        tl.reset()
+        assert tl.beta1 == 1.0 and tl.beta0 == tl.beta0_prior
+
+
+class TestEndToEndIntegrity:
+    @given(
+        length=st.integers(1, 4 << 20),
+        src_off=st.integers(0, 1 << 16),
+        dst_off=st.integers(0, 1 << 16),
+        seed=st.integers(0, 2 ** 16),
+        policy=st.sampled_from(["tent", "round_robin", "static_best2", "pinned"]),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_bytes_conserved_any_policy(self, length, src_off, dst_off, seed, policy):
+        from repro.core import EngineConfig
+
+        eng = TentEngine(FabricSpec(), config=EngineConfig(policy=policy), seed=seed)
+        size = length + max(src_off, dst_off) + 1
+        src = eng.register_segment(Location(node=0, kind=MemoryKind.HOST_DRAM), size)
+        dst = eng.register_segment(Location(node=1, kind=MemoryKind.HOST_DRAM), size)
+        payload = np.random.default_rng(seed).integers(0, 256, length, dtype=np.uint8)
+        src.write(src_off, payload)
+        res = eng.transfer_sync(src.segment_id, src_off, dst.segment_id, dst_off, length)
+        assert res.ok
+        np.testing.assert_array_equal(dst.read(dst_off, length), payload)
+        # fabric conservation: rdma bytes moved >= payload (retries may add)
+        moved = sum(
+            l.bytes_completed for l in eng.fabric.links.values()
+            if l.desc.node == 0 and l.desc.link_class.value in ("rdma", "tcp")
+        )
+        assert moved >= length
