@@ -7,19 +7,31 @@ size, batch size, and thread count. Policies are swapped per run:
   round_robin   Mooncake TE (state-blind striping)
   static_best2  NIXL/UCX (static best-K rails)
   pinned        UCCL-P2P (one NIC per region)
+
+The submission loop and the contention generators are the declarative
+scenario subsystem's (repro.scenarios) — benchmarks and the regression tier
+drive the exact same code; this module only keeps the TEBench-flavoured
+entry points (explicit segments, LoadResult).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import EngineConfig, FabricSpec, Location, MemoryKind, TentEngine
+from repro.scenarios import (
+    add_background_turbulence,
+    add_tenant_contention,
+    drive_closed_loop,
+    host_loc,
+)
 
-
-def host_loc(node: int, numa: int = 0) -> Location:
-    return Location(node=node, kind=MemoryKind.HOST_DRAM, device=numa, numa=numa)
+__all__ = [
+    "host_loc", "gpu_loc", "make_engine", "LoadResult", "closed_loop",
+    "add_background_turbulence", "add_tenant_contention", "fmt_gbps",
+]
 
 
 def gpu_loc(spec: FabricSpec, node: int, gpu: int) -> Location:
@@ -60,79 +72,12 @@ def closed_loop(
     """Each stream is one submission thread: it keeps exactly one batch of
     `batch_size` transfers in flight, resubmitting on completion, `iters`
     times. Returns per-request latencies on the virtual clock."""
-    latencies: List[float] = []
-    done = {i: 0 for i in range(len(streams))}
-    t_start = engine.fabric.now
-    bytes_total = 0
-
-    def submit(i: int) -> None:
-        nonlocal bytes_total
-        src, dst, block = streams[i]
-        b = engine.allocate_batch()
-        t0 = engine.fabric.now
-        engine.submit_transfer(b, [(src, 0, dst, 0, block)] * batch_size)
-        bytes_total += block * batch_size
-
-        def on_done(res, i=i, t0=t0):
-            latencies.append(engine.fabric.now - t0)
-            done[i] += 1
-            if done[i] < iters:
-                submit(i)
-
-        engine.on_batch_done(b, on_done)
-
-    for i in range(len(streams)):
-        submit(i)
-    guard = 0
-    while any(d < iters for d in done.values()):
-        if not engine.fabric.step():
-            raise RuntimeError("fabric idle before load completed")
-        guard += 1
-        if guard > 60_000_000:
-            raise RuntimeError("bench event budget exceeded")
+    out = drive_closed_loop(engine, list(streams), iters=iters, batch_size=batch_size)
     return LoadResult(
-        latencies=np.asarray(latencies),
-        makespan=engine.fabric.now - t_start,
-        bytes_total=bytes_total,
+        latencies=np.asarray([c[2] for c in out.completions]),
+        makespan=out.makespan,
+        bytes_total=out.bytes_total,
     )
-
-
-def add_background_turbulence(engine: TentEngine, *, seed: int = 7,
-                              horizon: float = 60.0, severity: float = 0.5) -> None:
-    """Transient per-rail slowdowns (noisy neighbours / signal degradation,
-    paper §2.2): deterministic schedule of degradation windows on RDMA rails."""
-    rng = np.random.default_rng(seed)
-    for node in range(engine.topology.spec.n_nodes):
-        for nic in engine.topology.rdma_nics(node):
-            # windows cover t=0 onward so short virtual-time experiments see
-            # the same non-uniform fabric that long-running services do
-            t = 0.0
-            while t < horizon:
-                dur = float(rng.uniform(0.05, 0.5))
-                if rng.random() < 0.4:
-                    factor = float(rng.uniform(1 - severity, 0.9))
-                    engine.fabric.schedule_degradation(nic.link_id, at=t, until=t + dur, factor=factor)
-                t += dur + float(rng.uniform(0.0, 0.3))
-
-
-def add_tenant_contention(engine: TentEngine, *, streams: int = 4,
-                          block: int = 64 << 20, horizon: float = 1e12) -> None:
-    """Co-located tenants saturating the same rails (paper §2.2 "noisy
-    neighbours"): closed-loop host-to-host elephant flows that run for the
-    whole experiment, scheduled through the same engine/fabric."""
-    for i in range(streams):
-        numa = i % 2
-        src = engine.register_segment(host_loc(0, numa), block, materialize=False)
-        dst = engine.register_segment(host_loc(1, numa), block, materialize=False)
-
-        def pump(src=src, dst=dst):
-            if engine.fabric.now >= horizon:
-                return
-            b = engine.allocate_batch()
-            engine.submit_transfer(b, [(src.segment_id, 0, dst.segment_id, 0, block)])
-            engine.on_batch_done(b, lambda res: pump())
-
-        pump()
 
 
 def fmt_gbps(bps: float) -> str:

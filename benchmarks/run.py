@@ -1,12 +1,25 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark driver: reproduces every TENT table/figure on the deterministic
 fabric simulator. Each module's run() returns rows; failures in one module
-do not mask the others."""
+do not mask the others.
+
+Scenario mode (machine-readable, for bench trajectory tracking):
+    python -m benchmarks.run --list-scenarios
+    python -m benchmarks.run --scenario single_rail_flap
+    python -m benchmarks.run --scenario all
+    python -m benchmarks.run --scenario-file my_scenario.json
+prints each `ScenarioReport` as one JSON document on stdout and exits
+non-zero if any scenario violates its declared expectations.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
+
+from repro.scenarios import ScenarioRunner, ScenarioSpec, get, names
 
 from . import (
     fig2_per_rail,
@@ -35,7 +48,7 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def run_figures() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in MODULES:
@@ -53,6 +66,57 @@ def main() -> None:
         sys.stdout.flush()
     if failures:
         raise SystemExit(1)
+
+
+def run_scenarios(specs) -> None:
+    violated = 0
+    for spec in specs:
+        t0 = time.time()
+        report = ScenarioRunner(spec).run()
+        doc = report.to_dict()
+        doc["wall_seconds"] = round(time.time() - t0, 3)
+        print(json.dumps(doc))
+        sys.stdout.flush()
+        if report.violations:
+            violated += 1
+            for v in report.violations:
+                print(f"{spec.name}: VIOLATION: {v}", file=sys.stderr)
+    if violated:
+        raise SystemExit(1)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", metavar="NAME",
+                    help="run one named scenario ('all' for the whole library) "
+                         "and print its ScenarioReport as JSON")
+    ap.add_argument("--scenario-file", metavar="PATH",
+                    help="run a ScenarioSpec from a JSON file")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="list the named scenario library and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_scenarios:
+        for n in names():
+            print(f"{n:28s} {get(n).description}")
+        return
+    if args.scenario_file:
+        with open(args.scenario_file) as f:
+            raw = f.read()
+        try:
+            spec = ScenarioSpec.from_json(raw)
+        except Exception as e:
+            ap.error(f"invalid scenario file {args.scenario_file}: {e!r}")
+        run_scenarios([spec])
+        return
+    if args.scenario:
+        try:
+            specs = [get(n) for n in names()] if args.scenario == "all" else [get(args.scenario)]
+        except KeyError as e:
+            ap.error(e.args[0])
+        run_scenarios(specs)
+        return
+    run_figures()
 
 
 if __name__ == "__main__":

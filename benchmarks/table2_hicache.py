@@ -6,82 +6,85 @@ style "global KVCache blocks"). Three configurations:
   baseline      no HiCache (recompute the whole history every turn)
   MooncakeTE    HiCache promotions through round-robin striping
   TENT          HiCache promotions through telemetry-driven slice spraying
-Identical cache policy/budget; only the transfer engine differs."""
+Identical cache policy/budget; only the transfer engine differs — both runs
+are one declarative `ScenarioSpec` (the library's `hicache_serve` scaled to
+the paper's fabric and conversation load) with a policy ablation list.
+"""
 from __future__ import annotations
 
-from repro.configs import get_config
-from repro.serving import (
-    HiCache,
-    ServeSimConfig,
-    ServingSimulator,
-    from_table2,
-    kv_bytes_per_token,
-    make_cpu_pool,
-    make_disk_pool,
-    make_gpu_pool,
+import dataclasses
+
+from repro.scenarios import (
+    BackgroundSpec,
+    EngineParams,
+    Expectations,
+    ScenarioRunner,
+    ServeWorkload,
+    TopologyParams,
+    get,
 )
 
-from .common import add_background_turbulence, add_tenant_contention, make_engine
+WORKLOAD = ServeWorkload(clients=8, concurrency=4, turns=10, input_tokens=2048,
+                         output_tokens=64, page_tokens=256)
+# the paper's long-running-service engine configuration (not the regression
+# tier's fast-probe variant)
+ENGINE = EngineParams(max_slices=64, reset_interval=30.0, probe_interval=0.05)
 
-SIM = ServeSimConfig(clients=8, concurrency=4, turns=10, input_tokens=2048,
-                     output_tokens=64)
-PAGE_TOKENS = 256
-
-
-def _engine(policy, *, contended=True):
-    # cap slice count (paper §4.2: bound control-plane overhead on huge pages)
-    eng = make_engine(policy, seed=21, max_slices=64)
-    if contended:
-        add_background_turbulence(eng, seed=13, horizon=4000.0, severity=0.6)
-        # co-tenant elephant flows on the same rails (global-store reality)
-        add_tenant_contention(eng, streams=3, block=512 << 20)
-    return eng
-
-
-def _hicache(eng, cfg):
-    pb = kv_bytes_per_token(cfg) * PAGE_TOKENS
-    turns_pages = SIM.turns * SIM.input_tokens // PAGE_TOKENS + 2
-    gpu_pages = 3 * turns_pages  # GPU tier holds a few conversations
-    cpu_pages = SIM.clients * turns_pages + 8
-    return HiCache(
-        eng, cfg,
-        gpu_pool=make_gpu_pool(eng, 0, 0, page_bytes=pb, num_pages=gpu_pages, materialize=False),
-        cpu_pool=make_cpu_pool(eng, 1, page_bytes=pb, num_pages=cpu_pages, materialize=False),
-        disk_pool=make_disk_pool(eng, 1, page_bytes=pb, num_pages=cpu_pages, materialize=False),
-        page_tokens=PAGE_TOKENS,
-    )
+CACHED = dataclasses.replace(
+    get("hicache_serve"),
+    name="table2_hicache",
+    topology=TopologyParams(),  # full-rate fabric
+    workload=WORKLOAD,
+    background=BackgroundSpec(turbulence_severity=0.6, turbulence_seed=13,
+                              turbulence_horizon=4000.0,
+                              tenant_streams=3, tenant_block=512 << 20),
+    engine=ENGINE,
+    policies=("tent", "round_robin"),
+    expectations=Expectations(tent_vs_baseline=1.0),
+    seed=21,
+)
+# baseline moves no KV bytes: no HiCache, no co-tenant store traffic
+BASELINE = dataclasses.replace(
+    CACHED,
+    name="table2_baseline",
+    workload=dataclasses.replace(WORKLOAD, use_hicache=False),
+    background=BackgroundSpec(),
+    policies=("tent",),
+    expectations=Expectations(tent_vs_baseline=0.0),
+)
 
 
 def run() -> list:
-    cfg = get_config("qwen3-moe-235b-a22b")
-    perf = from_table2()
-    results = {}
-    for label, policy, cached in (
-        ("baseline", "tent", False),
-        ("MooncakeTE", "round_robin", True),
-        ("TENT", "tent", True),
-    ):
-        eng = _engine(policy, contended=cached)  # baseline moves no KV bytes
-        hc = _hicache(eng, cfg) if cached else None
-        results[label] = ServingSimulator(eng, perf, hicache=hc, sim_cfg=SIM).run()
+    cached = ScenarioRunner(CACHED).run()
+    baseline = ScenarioRunner(BASELINE).run()
+    assert not baseline.violations, baseline.violations
+    base = baseline.policies["tent"]
+    results = {
+        "baseline": base,
+        "MooncakeTE": cached.policies["round_robin"],
+        "TENT": cached.policies["tent"],
+    }
     out = []
-    for label, st in results.items():
-        rounds = ";".join(f"R{r}={st.round_avg_ttft[r]:.2f}s" for r in (1, 5, 10))
+    for label, r in results.items():
+        rounds = ";".join(
+            f"R{n}={r.extra[f'round_avg_ttft_R{n}']:.2f}s" for n in (1, 5, 10))
         out.append({
             "name": f"table2.{label}",
-            "us_per_call": st.avg_ttft * 1e6,
+            "us_per_call": r.extra["avg_ttft_s"] * 1e6,
             "derived": (
-                f"input_tok_s={st.input_throughput:.0f};p90_ttft_s={st.p90_ttft:.2f};{rounds}"
+                f"input_tok_s={r.extra['input_throughput']:.0f};"
+                f"p90_ttft_s={r.extra['p90_ttft_s']:.2f};{rounds}"
             ),
         })
-    te, tent, base = results["MooncakeTE"], results["TENT"], results["baseline"]
+    te, tent = results["MooncakeTE"], results["TENT"]
     out.append({
         "name": "table2.summary",
         "us_per_call": 0.0,
         "derived": (
-            f"tent_vs_te_throughput={tent.input_throughput/te.input_throughput:.2f};"
-            f"tent_p90_reduction_pct={100*(1-tent.p90_ttft/te.p90_ttft):.1f};"
-            f"tent_vs_baseline_throughput={tent.input_throughput/base.input_throughput:.2f}"
+            f"tent_vs_te_throughput={tent.throughput/te.throughput:.2f};"
+            f"tent_p90_reduction_pct={100*(1-tent.extra['p90_ttft_s']/te.extra['p90_ttft_s']):.1f};"
+            f"tent_vs_baseline_throughput={tent.throughput/base.throughput:.2f}"
         ),
     })
+    assert not cached.violations, cached.violations
     return out

@@ -2,14 +2,19 @@
 Engine. Every rank pulls its FP16 weight shard through the transfer engine;
 only the backend policy differs. Qwen3-235B-A22B and GLM-4.5-Air sizes
 (scaled 1/64 to keep slice counts tractable on the event simulator — the
-improvement ratio, which is what Table 3 demonstrates, is scale-invariant)."""
+improvement ratio, which is what Table 3 demonstrates, is scale-invariant).
+Each model is one `ScenarioSpec` with a tent/round-robin ablation list."""
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
 
-from repro.serving import CheckpointEngine
-
-from .common import add_background_turbulence, make_engine
+from repro.scenarios import (
+    BackgroundSpec,
+    CheckpointWorkload,
+    EngineParams,
+    ScenarioRunner,
+    get,
+)
 
 SCALE = 64
 MODELS = {
@@ -18,19 +23,25 @@ MODELS = {
 }
 
 
-def _one(policy: str, nbytes: int) -> float:
-    eng = make_engine(policy, seed=6, max_slices=128)
-    add_background_turbulence(eng, seed=17, horizon=400.0, severity=0.6)
-    ce = CheckpointEngine(eng, nodes=2, gpus_per_node=8, materialize=False)
-    ce.register_checkpoint({"ckpt": nbytes})
-    return ce.update().seconds * SCALE
+def _spec(model: str, nbytes: int):
+    return dataclasses.replace(
+        get("checkpoint_broadcast"),
+        name=f"table3_{model}",
+        workload=CheckpointWorkload(nbytes=nbytes),
+        background=BackgroundSpec(turbulence_severity=0.6, turbulence_seed=17,
+                                  turbulence_horizon=400.0),
+        engine=EngineParams(max_slices=128, reset_interval=30.0,
+                            probe_interval=0.05),
+        seed=6,
+    )
 
 
 def run() -> list:
     out = []
     for model, nbytes in MODELS.items():
-        te = _one("round_robin", nbytes)
-        tent = _one("tent", nbytes)
+        report = ScenarioRunner(_spec(model, nbytes)).run()
+        te = report.policies["round_robin"].extra["update_seconds"] * SCALE
+        tent = report.policies["tent"].extra["update_seconds"] * SCALE
         out.append({
             "name": f"table3.{model}",
             "us_per_call": tent * 1e6,
@@ -38,4 +49,5 @@ def run() -> list:
                 f"te_s={te:.2f};tent_s={tent:.2f};improvement_pct={100*(1-tent/te):.1f}"
             ),
         })
+        assert not report.violations, report.violations
     return out

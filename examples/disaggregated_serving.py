@@ -4,6 +4,9 @@ A real (smoke-scale) qwen2-family model prefils prompts on node 0, ships the
 decode cache across the simulated fabric through TENT (the PD-disaggregation
 elephant flow), and decodes on node 1. Output tokens are verified against
 monolithic generation; then the multi-tier HiCache is exercised with reuse.
+The fabric is the one the `disagg_prefill_decode` regression scenario
+declares — including its mid-run tier-1 NIC flap, which the data plane must
+absorb without the model ever noticing.
 
 Run:  PYTHONPATH=src python examples/disaggregated_serving.py
 """
@@ -12,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import FabricSpec, TentEngine
 from repro.models import init_params
+from repro.scenarios import ScenarioRunner, get
 from repro.serving import (
     DisaggregatedServer,
     HiCache,
@@ -26,7 +29,7 @@ from repro.serving import (
 
 cfg = get_smoke_config("qwen2-0.5b").with_(remat="none")
 params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-engine = TentEngine(FabricSpec())
+engine, _ = ScenarioRunner(get("disagg_prefill_decode")).build_engine("tent")
 
 print("== prefill/decode disaggregation over TENT ==")
 server = DisaggregatedServer(engine, cfg, params, prefill_node=0, decode_node=1)

@@ -1,18 +1,31 @@
 """Quickstart: the TENT declarative transfer API in 40 lines.
 
-Builds a two-node H800-style fabric, registers segments, declares a batched
-transfer, and lets the engine spray slices across rails — then injects a NIC
-failure mid-flight and shows the data still arrives intact.
+The environment comes from the declarative scenario subsystem: we take the
+named `single_rail_flap` scenario, swap in a full-rate H800-style fabric and
+a mid-flight NIC failure, and let `ScenarioRunner.build_engine` materialize
+the engine with the fault program installed. Then we declare one batched
+transfer and watch the engine spray slices, absorb the flap, and deliver the
+bytes intact.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import numpy as np
 
-from repro.core import FabricSpec, Location, MemoryKind, TentEngine
+from repro.core import Location, MemoryKind
+from repro.scenarios import FaultEvent, ScenarioRunner, TopologyParams, get
 
-engine = TentEngine(FabricSpec())  # 2 nodes x 8 GPUs x 8x200Gbps rails
+# 1. describe the world declaratively: topology + fault program, no wires
+spec = dataclasses.replace(
+    get("single_rail_flap"),
+    name="quickstart",
+    topology=TopologyParams(),  # 2 nodes x 8 GPUs x 8x200Gbps rails
+    faults=(FaultEvent("fail", node=0, nic=1, at=0.0005, until=0.5),),
+)
+engine, _ = ScenarioRunner(spec).build_engine("tent")
 
-# 1. declare WHERE data lives (segments) — never WHICH wires to use
+# 2. declare WHERE data lives (segments) — never WHICH wires to use
 src = engine.register_segment(
     Location(node=0, kind=MemoryKind.HOST_DRAM, numa=0), 256 << 20, name="kv-src")
 dst = engine.register_segment(
@@ -21,11 +34,7 @@ dst = engine.register_segment(
 payload = np.random.default_rng(0).integers(0, 256, 256 << 20, dtype=np.uint8)
 src.write(0, payload)
 
-# 2. break a rail while the elephant flow is in flight
-nic = engine.topology.rdma_nic(0, 1)
-engine.fabric.schedule_failure(nic.link_id, at=0.0005, recover_at=0.5)
-
-# 3. declare intent; the engine plans routes, sprays slices, heals failures
+# 3. declare intent; the engine plans routes, sprays slices, heals the flap
 batch = engine.allocate_batch()
 engine.submit_transfer(batch, [(src.segment_id, 0, dst.segment_id, 0, 256 << 20)])
 result = engine.wait(batch)

@@ -3,14 +3,16 @@
 Trains a real smoke model a few steps, stages the updated checkpoint on the
 parameter-server node, then refreshes all 16 ranks' weights through the
 transfer engine — comparing Mooncake-TE-style striping vs TENT spraying on
-the same (turbulent) fabric, with byte-exact verification.
+the same degraded fabric, with byte-exact verification. The fabric and its
+fault program come from a declarative `ScenarioSpec`: the checkpoint
+broadcast scenario with two silently degraded rails.
 
 Run:  PYTHONPATH=src python examples/rl_weight_update.py
 """
-import numpy as np
+import dataclasses
 
 from repro.configs import get_smoke_config
-from repro.core import EngineConfig, FabricSpec, TentEngine
+from repro.scenarios import FaultEvent, ScenarioRunner, get
 from repro.serving import CheckpointEngine
 from repro.training import flatten_state, train
 
@@ -20,12 +22,18 @@ result = train(cfg, steps=8, batch_size=2, seq_len=64, log=lambda s: print("  " 
 print(f"  tokens/sec {result.tokens_per_sec:.0f}")
 
 print("\n== weight refresh across 2 nodes x 8 GPUs ==")
-for policy in ("round_robin", "tent"):
-    eng = TentEngine(FabricSpec(), config=EngineConfig(policy=policy), seed=3)
-    # degrade two rails: the telemetry-driven engine must steer around them
-    for nic_idx in (1, 5):
-        nic = eng.topology.rdma_nic(0, nic_idx)
-        eng.fabric.schedule_degradation(nic.link_id, at=0.0, until=1e9, factor=0.25)
+# the library's broadcast scenario, with two rails degraded to 25% for the
+# whole run: the telemetry-driven engine must steer around them
+spec = dataclasses.replace(
+    get("checkpoint_broadcast"),
+    name="rl_weight_update",
+    faults=tuple(FaultEvent("degrade", node=0, nic=n, at=0.0, until=1e9, factor=0.25)
+                 for n in (1, 5)),
+    seed=3,
+)
+runner = ScenarioRunner(spec)
+for policy in spec.policies[::-1]:  # round_robin first, tent last
+    eng, _ = runner.build_engine(policy)
     ce = CheckpointEngine(eng, nodes=2, gpus_per_node=8)
     # scale the table to elephant-flow size by repeating the real weights
     import jax

@@ -417,6 +417,27 @@ class TentEngine:
             self.health.readmit(link_id)
 
     # ----------------------------------------------------------- metrics
+    def audit(self, *, ignore: Optional[Sequence[int]] = None) -> Dict[str, int]:
+        """Batch/slice accounting across the engine's lifetime: every slice
+        ever submitted must be either completed (its batch DONE) or surfaced
+        as an application-visible batch failure — the zero-lost-slice
+        invariant the scenario regression tier asserts. Batch ids in
+        `ignore` (e.g. open-ended background tenant flows) are skipped."""
+        skip = frozenset(ignore or ())
+        out = {"batches_done": 0, "batches_failed": 0, "batches_open": 0,
+               "slices_outstanding": 0}
+        for bid, bc in self._batches.items():
+            if bid in skip or bc.state == BatchState.OPEN:
+                continue
+            if bc.state == BatchState.DONE:
+                out["batches_done"] += 1
+            elif bc.state == BatchState.FAILED:
+                out["batches_failed"] += 1
+            else:
+                out["batches_open"] += 1
+                out["slices_outstanding"] += bc.remaining_slices
+        return out
+
     def percentile_latency(self, q: float) -> float:
         if not self.slice_latencies:
             return 0.0

@@ -1,0 +1,38 @@
+"""Declarative scenarios: one spec consumed by the engine, benchmarks, and
+the fast regression tier alike (see README.md in this directory)."""
+from .library import SCENARIOS, get, names
+from .runner import PolicyReport, ScenarioReport, ScenarioRunner, run_scenario
+from .spec import (
+    BackgroundSpec,
+    CheckpointWorkload,
+    ClosedLoopWorkload,
+    EngineParams,
+    Expectations,
+    FaultEvent,
+    ScenarioSpec,
+    ServeWorkload,
+    TopologyParams,
+    degrade_ramp,
+    flap_storm,
+    rail_outage,
+)
+from .workloads import (
+    WorkloadOutcome,
+    add_background_turbulence,
+    add_tenant_contention,
+    drive_closed_loop,
+    gpu_loc,
+    host_loc,
+    run_closed_loop,
+    run_workload,
+)
+
+__all__ = [
+    "SCENARIOS", "get", "names", "PolicyReport", "ScenarioReport",
+    "ScenarioRunner", "run_scenario", "BackgroundSpec", "CheckpointWorkload",
+    "ClosedLoopWorkload", "EngineParams", "Expectations", "FaultEvent",
+    "ScenarioSpec", "ServeWorkload", "TopologyParams", "degrade_ramp",
+    "flap_storm", "rail_outage", "WorkloadOutcome",
+    "add_background_turbulence", "add_tenant_contention", "drive_closed_loop",
+    "gpu_loc", "host_loc", "run_closed_loop", "run_workload",
+]

@@ -1,0 +1,194 @@
+"""The named scenario library: the regression matrix every PR runs against.
+
+Each entry is a small, fully deterministic instance of one hostile condition
+from the paper (§2.2-§2.3, §5): link flaps, flap storms, correlated outages,
+NUMA-skewed incast, heterogeneous rails, tenant contention, elephant+mice
+mixes, silent degradation ramps, disaggregated prefill/decode KV shipping,
+HiCache serving, and checkpoint broadcast. Sizes are scaled down (slower
+virtual NICs, MB-scale blocks) so the whole matrix runs in seconds of wall
+clock — the asserted quantities (policy ordering, recovery time on the
+virtual clock, slice accounting, byte balance) are scale-invariant, the same
+trick benchmarks/table3 uses.
+
+Benchmarks needing full-scale variants `dataclasses.replace(...)` these specs
+rather than redefining them.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .spec import (
+    BackgroundSpec,
+    CheckpointWorkload,
+    ClosedLoopWorkload,
+    EngineParams,
+    Expectations,
+    FaultEvent,
+    ScenarioSpec,
+    ServeWorkload,
+    TopologyParams,
+    degrade_ramp,
+    flap_storm,
+    rail_outage,
+)
+
+# A slowed-down 2-node fabric for timeline (recovery) scenarios: completion
+# density per bucket stays high while the event count stays small.
+_SLOW = TopologyParams(nic_bw=1e9)
+_PUMP = ClosedLoopWorkload(streams=4, blocks=(1 << 20,), iters=0, duration=0.08)
+
+
+def _timeline(name: str, description: str, **kw) -> ScenarioSpec:
+    kw.setdefault("topology", _SLOW)
+    kw.setdefault("workload", _PUMP)
+    kw.setdefault("bucket", 0.004)
+    return ScenarioSpec(name=name, description=description, **kw)
+
+
+SCENARIOS: Dict[str, ScenarioSpec] = {}
+
+
+def _register(spec: ScenarioSpec) -> ScenarioSpec:
+    assert spec.name not in SCENARIOS, f"duplicate scenario {spec.name}"
+    SCENARIOS[spec.name] = spec
+    return spec
+
+
+_register(_timeline(
+    "single_rail_flap",
+    "One NIC flaps down mid-run and recovers (paper Fig. 10): the engine "
+    "must mask the failure, run degraded, and reintegrate the rail.",
+    faults=(FaultEvent("fail", 0, 0, at=0.025, until=0.06),),
+    expectations=Expectations(
+        tent_vs_baseline=1.0, max_recovery_ms=50.0, max_stall_ms=50.0),
+))
+
+_register(_timeline(
+    "flap_storm",
+    "Repeated short down/up cycles on one rail (paper §2.3 link flaps): "
+    "every onset must be absorbed without app-visible failures.",
+    workload=ClosedLoopWorkload(streams=4, blocks=(1 << 20,), iters=0, duration=0.1),
+    faults=flap_storm(0, 0, start=0.02, flaps=3, down=0.008, up=0.012),
+    expectations=Expectations(
+        tent_vs_baseline=1.0, max_recovery_ms=50.0, max_stall_ms=50.0),
+))
+
+_register(_timeline(
+    "correlated_outage",
+    "A ToR/leaf failure takes 5 of 8 rails at once: capacity halves, so the "
+    "dip metric is moot — the engine must keep completing work (stall "
+    "bounded) and lose nothing.",
+    workload=ClosedLoopWorkload(streams=4, blocks=(1 << 20,), iters=0, duration=0.12),
+    faults=rail_outage(0, (0, 1, 2, 3, 4), at=0.03, until=0.08),
+    expectations=Expectations(tent_vs_baseline=1.0, max_stall_ms=50.0),
+))
+
+_register(ScenarioSpec(
+    "numa_skew_incast",
+    "Two sender nodes converge on one receiver node, all buffers pinned to "
+    "NUMA0 (paper §2.2 skewed submission): receiver-side serialization plus "
+    "cross-NUMA penalties.",
+    topology=TopologyParams(n_nodes=3),
+    workload=ClosedLoopWorkload(
+        streams=4, blocks=(8 << 20,), iters=10,
+        src_nodes=(0, 1), dst_nodes=(2,), src_numa=(0,), dst_numa=(0,)),
+    expectations=Expectations(tent_vs_baseline=0.95),
+))
+
+_register(ScenarioSpec(
+    "hetero_bandwidth_rails",
+    "Half the rails run at 35% bandwidth (mixed NIC generations, paper "
+    "§2.2): state-blind striping is dragged by the stragglers; telemetry "
+    "must discover the asymmetry silently.",
+    topology=TopologyParams(
+        rail_bw_factors=((4, 0.35), (5, 0.35), (6, 0.35), (7, 0.35))),
+    workload=ClosedLoopWorkload(streams=4, blocks=(8 << 20,), iters=12),
+    expectations=Expectations(tent_vs_baseline=1.05),
+))
+
+_register(ScenarioSpec(
+    "multi_tenant_contention",
+    "KV shipping between GPUs while co-located tenants run elephant flows "
+    "and the fabric sees turbulence windows (paper §2.2 noisy neighbours).",
+    workload=ClosedLoopWorkload(
+        streams=4, blocks=(8 << 20,), iters=10, endpoints="gpu"),
+    background=BackgroundSpec(
+        turbulence_severity=0.5, tenant_streams=2, tenant_block=32 << 20),
+    expectations=Expectations(tent_vs_baseline=1.0),
+))
+
+_register(ScenarioSpec(
+    "elephant_mice_mix",
+    "One elephant stream and three mice streams share the rails: against a "
+    "statically ranked engine (NIXL-style best-K) the mice are stuck behind "
+    "elephant slices on the 'best' rail, so their P50 explodes; spraying "
+    "must keep mice latency flat while moving more total bytes.",
+    workload=ClosedLoopWorkload(
+        streams=4, blocks=(64 << 20, 1 << 20, 1 << 20, 1 << 20), iters=10),
+    policies=("tent", "static_best2"),
+    expectations=Expectations(
+        tent_vs_baseline=1.5, p99_vs_baseline=1.05, p50_vs_baseline=0.5),
+))
+
+_register(_timeline(
+    "degrade_recover_ramp",
+    "Two rails silently degrade in steps (0.7 -> 0.4 -> 0.15) then recover "
+    "(paper §2.2 signal degradation): only telemetry can see it; the "
+    "periodic reset must re-integrate the recovered rails.",
+    workload=ClosedLoopWorkload(streams=4, blocks=(1 << 20,), iters=0, duration=0.1),
+    faults=(degrade_ramp(0, 0, start=0.01, step=0.02, factors=(0.7, 0.4, 0.15))
+            + degrade_ramp(0, 1, start=0.01, step=0.02, factors=(0.7, 0.4, 0.15))),
+    expectations=Expectations(tent_vs_baseline=1.0),
+))
+
+_register(_timeline(
+    "disagg_prefill_decode",
+    "Dual-node disaggregated serving: prefill GPUs on node 0 ship KV to "
+    "decode GPUs on node 1 (GPUDirect elephant flows) while a tier-1 NIC "
+    "flaps — the decode side must never observe the fault.",
+    workload=ClosedLoopWorkload(
+        streams=4, blocks=(1 << 20,), iters=0, duration=0.08, endpoints="gpu"),
+    faults=(FaultEvent("fail", 0, 1, at=0.02, until=0.05),),
+    expectations=Expectations(
+        tent_vs_baseline=1.0, max_recovery_ms=50.0, max_stall_ms=50.0),
+))
+
+_register(ScenarioSpec(
+    "hicache_serve",
+    "Multi-turn HiCache serving (Table 2 at regression scale): cached-prefix "
+    "promotions from the global store node ride a slow turbulent fabric; the "
+    "transfer policy is the only difference between runs.",
+    topology=TopologyParams(nic_bw=2.5e9),
+    workload=ServeWorkload(),
+    background=BackgroundSpec(turbulence_severity=0.7),
+    expectations=Expectations(tent_vs_baseline=1.0),
+))
+
+_register(ScenarioSpec(
+    "checkpoint_broadcast",
+    "RL weight refresh (Table 3 at regression scale): 16 ranks pull their "
+    "shards from the parameter server through a turbulent fabric.",
+    workload=CheckpointWorkload(nbytes=512 << 20),
+    background=BackgroundSpec(turbulence_severity=0.6),
+    expectations=Expectations(tent_vs_baseline=1.0),
+))
+
+_register(ScenarioSpec(
+    "uniform_spray",
+    "Healthy symmetric fabric, host-to-host elephants: the null case. The "
+    "spray must stay balanced across rails and telemetry overhead must not "
+    "cost throughput against blind striping.",
+    workload=ClosedLoopWorkload(streams=4, blocks=(8 << 20,), iters=12),
+    expectations=Expectations(tent_vs_baseline=0.9, max_rail_imbalance=1.35),
+))
+
+
+def names() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def get(name: str) -> ScenarioSpec:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have {names()}") from None

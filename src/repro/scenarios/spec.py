@@ -1,0 +1,369 @@
+"""Declarative scenario specifications.
+
+A `ScenarioSpec` is a pure-data description of one reproducible experiment:
+a topology (`FabricSpec` parameters), a workload (closed-loop TEBench load,
+HiCache serving turns, or a checkpoint broadcast), a fault program (failure
+and degradation windows, flap storms, correlated multi-rail outages), the
+background contention, the policy ablation list, and the invariants the run
+is expected to uphold. The engine, the benchmarks, and the regression tests
+all consume the same spec objects, so every claim in the paper is checked
+against the same scenario matrix everywhere.
+
+Specs are frozen dataclasses with a dict/JSON round-trip (`to_dict` /
+`from_dict`, `to_json` / `from_json`): a scenario can live in code, in a
+JSON file, or on a benchmark command line and mean exactly the same run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import ClassVar, Dict, Tuple, Union
+
+from ..core import EngineConfig, FabricSpec, HealthConfig, NodeSpec
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyParams:
+    """The subset of `FabricSpec` a scenario varies, plus heterogeneity.
+
+    `rail_bw_factors` models heterogeneous rails (mixed NIC generations,
+    mis-negotiated links): each (nic_index, factor) entry derates that rail
+    ordinal on *every* node for the whole run. It is applied as a silent
+    fabric-level degradation, so the engine only learns it via telemetry —
+    exactly the paper's hetero-bandwidth setting (§2.2).
+    """
+
+    n_nodes: int = 2
+    n_numa: int = 2
+    n_gpus: int = 8
+    n_nics: int = 8
+    nic_bw: float = 25.0e9
+    has_nvlink: bool = True
+    has_gpudirect: bool = True
+    rail_bw_factors: Tuple[Tuple[int, float], ...] = ()
+
+    def to_fabric_spec(self) -> FabricSpec:
+        return FabricSpec(
+            n_nodes=self.n_nodes,
+            node=NodeSpec(n_numa=self.n_numa, n_gpus=self.n_gpus, n_nics=self.n_nics),
+            nic_bw=self.nic_bw,
+            has_nvlink=self.has_nvlink,
+            has_gpudirect=self.has_gpudirect,
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TopologyParams":
+        d = dict(d)
+        d["rail_bw_factors"] = tuple(
+            (int(i), float(f)) for i, f in d.get("rail_bw_factors", ())
+        )
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Fault program
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fabric fault on an RDMA rail.
+
+    kind "fail":    the rail flaps down over [at, until) — in-flight slices
+                    abort (paper §2.3) and new posts error out.
+    kind "degrade": effective bandwidth is multiplied by `factor` over
+                    [at, until) — silent, only telemetry can see it.
+    """
+
+    kind: str  # "fail" | "degrade"
+    node: int
+    nic: int
+    at: float
+    until: float
+    factor: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("fail", "degrade"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.until <= self.at:
+            raise ValueError("fault window must have until > at")
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultEvent":
+        return cls(**d)
+
+
+def flap_storm(
+    node: int, nic: int, *, start: float, flaps: int, down: float, up: float
+) -> Tuple[FaultEvent, ...]:
+    """Repeated short down/up cycles on one rail (the paper's link flaps)."""
+    out = []
+    t = start
+    for _ in range(flaps):
+        out.append(FaultEvent("fail", node, nic, at=t, until=t + down))
+        t += down + up
+    return tuple(out)
+
+
+def rail_outage(
+    node: int, nics: Tuple[int, ...], *, at: float, until: float
+) -> Tuple[FaultEvent, ...]:
+    """Correlated multi-rail outage (ToR/leaf failure takes several NICs)."""
+    return tuple(FaultEvent("fail", node, n, at=at, until=until) for n in nics)
+
+
+def degrade_ramp(
+    node: int, nic: int, *, start: float, step: float, factors: Tuple[float, ...]
+) -> Tuple[FaultEvent, ...]:
+    """Stepwise degrade-then-recover ramp (e.g. 0.7 -> 0.4 -> 0.15 -> healthy)."""
+    return tuple(
+        FaultEvent("degrade", node, nic, at=start + i * step,
+                   until=start + (i + 1) * step, factor=f)
+        for i, f in enumerate(factors)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClosedLoopWorkload:
+    """TEBench-style closed-loop load (paper §5.1.3): each stream keeps one
+    batch of `batch_size` block transfers in flight, resubmitting on
+    completion. Stream i draws its block size / endpoints cyclically from
+    the tuples, so elephant+mice mixes and multi-node incast are just data.
+
+    Either `iters` (each stream submits that many batches) or, when
+    `duration` > 0, streams pump until the virtual clock passes `duration`.
+    """
+
+    kind: ClassVar[str] = "closed_loop"
+    streams: int = 4
+    blocks: Tuple[int, ...] = (16 << 20,)
+    iters: int = 16
+    batch_size: int = 1
+    duration: float = 0.0
+    endpoints: str = "host"  # "host" | "gpu"
+    src_nodes: Tuple[int, ...] = (0,)
+    dst_nodes: Tuple[int, ...] = (1,)
+    src_numa: Tuple[int, ...] = (0, 1)
+    dst_numa: Tuple[int, ...] = (0, 1)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ClosedLoopWorkload":
+        d = dict(d)
+        for key in ("blocks", "src_nodes", "dst_nodes", "src_numa", "dst_numa"):
+            if key in d:
+                d[key] = tuple(int(v) for v in d[key])
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeWorkload:
+    """HiCache multi-turn serving (paper §5.1.1 / Table 2): conversations on
+    `gpu_node`, the global KV pool's CPU/disk tiers on `store_node`; cached
+    prefixes are promoted through the engine under test."""
+
+    kind: ClassVar[str] = "serve"
+    model: str = "qwen3-moe-235b-a22b"
+    clients: int = 4
+    concurrency: int = 2
+    turns: int = 4
+    input_tokens: int = 1024
+    output_tokens: int = 32
+    page_tokens: int = 256
+    use_hicache: bool = True
+    gpu_node: int = 0
+    store_node: int = 1
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeWorkload":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointWorkload:
+    """Checkpoint-engine broadcast (paper §5.1.2 / Table 3): every rank pulls
+    its weight shard from the parameter-server node in one declarative batch."""
+
+    kind: ClassVar[str] = "checkpoint"
+    nbytes: int = 1 << 30
+    nodes: int = 2
+    gpus_per_node: int = 8
+    source_node: int = 0
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CheckpointWorkload":
+        return cls(**d)
+
+
+Workload = Union[ClosedLoopWorkload, ServeWorkload, CheckpointWorkload]
+
+WORKLOAD_KINDS: Dict[str, type] = {
+    w.kind: w for w in (ClosedLoopWorkload, ServeWorkload, CheckpointWorkload)
+}
+
+
+# ---------------------------------------------------------------------------
+# Background contention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackgroundSpec:
+    """Fabric-level noise the engine does not control: transient per-rail
+    turbulence windows and co-located tenant elephant flows (paper §2.2)."""
+
+    turbulence_severity: float = 0.0  # 0 disables
+    turbulence_seed: int = 7
+    turbulence_horizon: float = 60.0
+    tenant_streams: int = 0
+    tenant_block: int = 64 << 20
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BackgroundSpec":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Engine knobs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineParams:
+    """The `EngineConfig`/`HealthConfig` knobs a scenario pins down. The
+    policy itself comes from the spec's ablation list."""
+
+    slice_bytes: int = 64 * 1024
+    max_slices: int = 64
+    max_inflight: int = 256
+    gamma: float = 0.05
+    reset_interval: float = 1.0
+    probe_interval: float = 0.02
+    retry_limit: int = 8
+
+    def to_engine_config(self, policy: str) -> EngineConfig:
+        return EngineConfig(
+            policy=policy,
+            slice_bytes=self.slice_bytes,
+            max_slices=self.max_slices,
+            max_inflight=self.max_inflight,
+            gamma=self.gamma,
+            reset_interval=self.reset_interval,
+            health=HealthConfig(
+                probe_interval=self.probe_interval, retry_limit=self.retry_limit
+            ),
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EngineParams":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Expectations (the regression tier's per-scenario invariants)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Expectations:
+    """What must hold for the scenario to count as passing. A value of 0
+    disables the corresponding check; `ScenarioReport.violations` lists every
+    breach, so benchmarks and tests share one notion of "healthy"."""
+
+    # primary policy throughput >= factor * every baseline's (0 disables)
+    tent_vs_baseline: float = 1.0
+    # worst throughput-dip duration after any "fail" onset, virtual ms
+    max_recovery_ms: float = 0.0
+    # worst time-to-next-completion after any "fail" onset, virtual ms
+    max_stall_ms: float = 0.0
+    # max/mean byte ratio across the busiest node's RDMA rails (primary policy)
+    max_rail_imbalance: float = 0.0
+    # primary P99 latency <= factor * every baseline's P99 (0 disables)
+    p99_vs_baseline: float = 0.0
+    # primary P50 latency <= factor * every baseline's P50 (0 disables);
+    # mice-dominated mixes use this to pin down head-of-line isolation
+    p50_vs_baseline: float = 0.0
+    # no app-visible failures and no slice unaccounted for, any policy
+    zero_lost_slices: bool = True
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Expectations":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# The scenario itself
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    name: str
+    description: str = ""
+    topology: TopologyParams = dataclasses.field(default_factory=TopologyParams)
+    workload: Workload = dataclasses.field(default_factory=ClosedLoopWorkload)
+    faults: Tuple[FaultEvent, ...] = ()
+    background: BackgroundSpec = dataclasses.field(default_factory=BackgroundSpec)
+    policies: Tuple[str, ...] = ("tent", "round_robin")
+    engine: EngineParams = dataclasses.field(default_factory=EngineParams)
+    expectations: Expectations = dataclasses.field(default_factory=Expectations)
+    seed: int = 0
+    bucket: float = 0.005  # throughput-timeline bucket width (virtual s)
+
+    @property
+    def primary_policy(self) -> str:
+        return self.policies[0]
+
+    @property
+    def baseline_policies(self) -> Tuple[str, ...]:
+        return self.policies[1:]
+
+    # -- round trip ----------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["workload"] = {"kind": self.workload.kind, **d["workload"]}
+        return _jsonable(d)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSpec":
+        d = dict(d)
+        wl = dict(d["workload"])
+        wl_cls = WORKLOAD_KINDS[wl.pop("kind")]
+        return cls(
+            name=d["name"],
+            description=d.get("description", ""),
+            topology=TopologyParams.from_dict(d.get("topology", {})),
+            workload=wl_cls.from_dict(wl),
+            faults=tuple(FaultEvent.from_dict(f) for f in d.get("faults", ())),
+            background=BackgroundSpec.from_dict(d.get("background", {})),
+            policies=tuple(d.get("policies", ("tent", "round_robin"))),
+            engine=EngineParams.from_dict(d.get("engine", {})),
+            expectations=Expectations.from_dict(d.get("expectations", {})),
+            seed=int(d.get("seed", 0)),
+            bucket=float(d.get("bucket", 0.005)),
+        )
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ScenarioSpec":
+        return cls.from_dict(json.loads(s))
+
+
+def _jsonable(obj):
+    """Tuples -> lists, recursively, so to_dict() output is json.dumps-ready
+    and equals json.loads(to_json()) exactly (round-trip tests rely on it)."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    return obj

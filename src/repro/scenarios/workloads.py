@@ -1,0 +1,290 @@
+"""Workload executors and background-contention generators.
+
+Everything here drives a `TentEngine` on its virtual clock and reports a
+uniform `WorkloadOutcome` (completion timeline + byte totals + audit), so the
+`ScenarioRunner` can compute the same metrics for very different workloads.
+`benchmarks/common.py` re-exports the generators so TEBench scripts and the
+scenario matrix share one implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from ..core import Location, MemoryKind, TentEngine
+from .spec import CheckpointWorkload, ClosedLoopWorkload, ServeWorkload, Workload
+
+EVENT_BUDGET = 60_000_000
+
+
+@dataclasses.dataclass
+class WorkloadOutcome:
+    """What one policy-run of one workload produced, before metric reduction."""
+
+    completions: List[Tuple[float, int, float]]  # (t_end, nbytes, latency)
+    bytes_total: int
+    makespan: float
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Segment placement helpers
+# ---------------------------------------------------------------------------
+
+
+def host_loc(node: int, numa: int = 0) -> Location:
+    return Location(node=node, kind=MemoryKind.HOST_DRAM, device=numa, numa=numa)
+
+
+def gpu_loc(engine: TentEngine, node: int, gpu: int) -> Location:
+    spec = engine.topology.spec
+    return Location(node=node, kind=MemoryKind.DEVICE_HBM, device=gpu,
+                    numa=spec.node.gpu_numa(gpu))
+
+
+def _cyc(t: Tuple[int, ...], i: int) -> int:
+    return t[i % len(t)]
+
+
+def _stream_endpoints(engine: TentEngine, wl: ClosedLoopWorkload, i: int):
+    src_node, dst_node = _cyc(wl.src_nodes, i), _cyc(wl.dst_nodes, i)
+    block = _cyc(wl.blocks, i)
+    if wl.endpoints == "gpu":
+        n_gpus = engine.topology.spec.node.n_gpus
+        src = gpu_loc(engine, src_node, i % n_gpus)
+        dst = gpu_loc(engine, dst_node, i % n_gpus)
+    elif wl.endpoints == "host":
+        src = host_loc(src_node, _cyc(wl.src_numa, i))
+        dst = host_loc(dst_node, _cyc(wl.dst_numa, i))
+    else:
+        raise ValueError(f"unknown endpoints kind {wl.endpoints!r}")
+    s = engine.register_segment(src, block, materialize=False)
+    d = engine.register_segment(dst, block, materialize=False)
+    return s, d, block
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop (TEBench) executor
+# ---------------------------------------------------------------------------
+
+
+def drive_closed_loop(
+    engine: TentEngine,
+    streams: List[Tuple[int, int, int]],  # (src_seg_id, dst_seg_id, block_bytes)
+    *,
+    iters: int,
+    batch_size: int = 1,
+    duration: float = 0.0,
+) -> WorkloadOutcome:
+    """The TEBench submission loop: each stream keeps exactly one batch of
+    `batch_size` transfers in flight, resubmitting on completion — `iters`
+    times, or until `duration` on the virtual clock when set. Shared by the
+    scenario runner and benchmarks/common.py."""
+    completions: List[Tuple[float, int, float]] = []
+    pending: Set[int] = set()
+    done = [0] * len(streams)
+    bytes_total = 0
+    t_start = engine.fabric.now
+    timed = duration > 0
+    deadline = t_start + duration  # duration is relative to the current clock
+
+    def submit(i: int) -> None:
+        nonlocal bytes_total
+        if timed and engine.fabric.now >= deadline:
+            return
+        src, dst, block = streams[i]
+        b = engine.allocate_batch()
+        t0 = engine.fabric.now
+        engine.submit_transfer(b, [(src, 0, dst, 0, block)] * batch_size)
+        pending.add(b)
+        bytes_total += block * batch_size
+
+        def on_done(res, i=i, b=b, t0=t0, block=block):
+            pending.discard(b)
+            completions.append((engine.fabric.now, block * batch_size,
+                                engine.fabric.now - t0))
+            done[i] += 1
+            if timed or done[i] < iters:
+                submit(i)
+
+        engine.on_batch_done(b, on_done)
+
+    for i in range(len(streams)):
+        submit(i)
+
+    def active() -> bool:
+        if pending:
+            return True
+        return (not timed) and any(d < iters for d in done)
+
+    guard = 0
+    while active():
+        if not engine.fabric.step():
+            raise RuntimeError("fabric idle before workload completed")
+        guard += 1
+        if guard > EVENT_BUDGET:
+            raise RuntimeError("workload event budget exceeded")
+    return WorkloadOutcome(
+        completions=completions,
+        bytes_total=bytes_total,
+        makespan=engine.fabric.now - t_start,
+    )
+
+
+def run_closed_loop(engine: TentEngine, wl: ClosedLoopWorkload) -> WorkloadOutcome:
+    streams = []
+    for i in range(wl.streams):
+        src, dst, block = _stream_endpoints(engine, wl, i)
+        streams.append((src.segment_id, dst.segment_id, block))
+    return drive_closed_loop(
+        engine, streams, iters=wl.iters, batch_size=wl.batch_size,
+        duration=wl.duration)
+
+
+# ---------------------------------------------------------------------------
+# HiCache serving executor
+# ---------------------------------------------------------------------------
+
+
+def run_serve(engine: TentEngine, wl: ServeWorkload) -> WorkloadOutcome:
+    from ..configs import get_config
+    from ..serving import (
+        HiCache,
+        ServeSimConfig,
+        ServingSimulator,
+        from_table2,
+        kv_bytes_per_token,
+        make_cpu_pool,
+        make_disk_pool,
+        make_gpu_pool,
+    )
+
+    cfg = get_config(wl.model)
+    hc: Optional[HiCache] = None
+    if wl.use_hicache:
+        pb = kv_bytes_per_token(cfg) * wl.page_tokens
+        turns_pages = wl.turns * wl.input_tokens // wl.page_tokens + 2
+        hc = HiCache(
+            engine, cfg,
+            gpu_pool=make_gpu_pool(engine, wl.gpu_node, 0, page_bytes=pb,
+                                   num_pages=3 * turns_pages, materialize=False),
+            cpu_pool=make_cpu_pool(engine, wl.store_node, page_bytes=pb,
+                                   num_pages=wl.clients * turns_pages + 8,
+                                   materialize=False),
+            disk_pool=make_disk_pool(engine, wl.store_node, page_bytes=pb,
+                                     num_pages=wl.clients * turns_pages + 8,
+                                     materialize=False),
+            page_tokens=wl.page_tokens,
+        )
+    sim = ServingSimulator(
+        engine, from_table2(), hicache=hc,
+        sim_cfg=ServeSimConfig(
+            clients=wl.clients, concurrency=wl.concurrency, turns=wl.turns,
+            input_tokens=wl.input_tokens, output_tokens=wl.output_tokens,
+        ),
+    )
+    t0 = engine.fabric.now
+    st = sim.run()
+    extra = {
+        "input_throughput": st.input_throughput,
+        "avg_ttft_s": st.avg_ttft,
+        "p50_ttft_s": st.p50_ttft,
+        "p90_ttft_s": st.p90_ttft,
+        "p99_ttft_s": st.p99_ttft,
+        "bytes_promoted": float(st.bytes_promoted),
+    }
+    for r, v in st.round_avg_ttft.items():
+        extra[f"round_avg_ttft_R{r}"] = v
+    return WorkloadOutcome(
+        completions=[],
+        bytes_total=st.bytes_promoted,
+        makespan=engine.fabric.now - t0 if engine.fabric.now > t0 else st.makespan,
+        extra=extra,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-broadcast executor
+# ---------------------------------------------------------------------------
+
+
+def run_checkpoint(engine: TentEngine, wl: CheckpointWorkload) -> WorkloadOutcome:
+    from ..serving import CheckpointEngine
+
+    ce = CheckpointEngine(
+        engine, nodes=wl.nodes, gpus_per_node=wl.gpus_per_node,
+        source_node=wl.source_node, materialize=False,
+    )
+    ce.register_checkpoint({"ckpt": wl.nbytes})
+    t0 = engine.fabric.now
+    res = ce.update()
+    return WorkloadOutcome(
+        completions=[(engine.fabric.now, res.bytes, res.seconds)],
+        bytes_total=res.bytes,
+        makespan=res.seconds,
+        extra={
+            "update_seconds": res.seconds,
+            "aggregate_bandwidth": res.aggregate_bandwidth,
+            "ranks": float(res.ranks),
+        },
+    )
+
+
+def run_workload(engine: TentEngine, wl: Workload) -> WorkloadOutcome:
+    if isinstance(wl, ClosedLoopWorkload):
+        return run_closed_loop(engine, wl)
+    if isinstance(wl, ServeWorkload):
+        return run_serve(engine, wl)
+    if isinstance(wl, CheckpointWorkload):
+        return run_checkpoint(engine, wl)
+    raise TypeError(f"unknown workload {type(wl).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Background contention generators (shared with benchmarks/common.py)
+# ---------------------------------------------------------------------------
+
+
+def add_background_turbulence(engine: TentEngine, *, seed: int = 7,
+                              horizon: float = 60.0, severity: float = 0.5) -> None:
+    """Transient per-rail slowdowns (noisy neighbours / signal degradation,
+    paper §2.2): deterministic schedule of degradation windows on RDMA rails."""
+    rng = np.random.default_rng(seed)
+    for node in range(engine.topology.spec.n_nodes):
+        for nic in engine.topology.rdma_nics(node):
+            # windows cover t=0 onward so short virtual-time experiments see
+            # the same non-uniform fabric that long-running services do
+            t = 0.0
+            while t < horizon:
+                dur = float(rng.uniform(0.05, 0.5))
+                if rng.random() < 0.4:
+                    factor = float(rng.uniform(1 - severity, 0.9))
+                    engine.fabric.schedule_degradation(nic.link_id, at=t, until=t + dur, factor=factor)
+                t += dur + float(rng.uniform(0.0, 0.3))
+
+
+def add_tenant_contention(engine: TentEngine, *, streams: int = 4,
+                          block: int = 64 << 20, horizon: float = 1e12,
+                          record: Optional[Set[int]] = None) -> None:
+    """Co-located tenants saturating the same rails (paper §2.2 "noisy
+    neighbours"): closed-loop host-to-host elephant flows that run for the
+    whole experiment, scheduled through the same engine/fabric. Batch ids are
+    added to `record` so audits can separate tenant traffic from the workload
+    under test."""
+    for i in range(streams):
+        numa = i % 2
+        src = engine.register_segment(host_loc(0, numa), block, materialize=False)
+        dst = engine.register_segment(host_loc(1, numa), block, materialize=False)
+
+        def pump(src=src, dst=dst):
+            if engine.fabric.now >= horizon:
+                return
+            b = engine.allocate_batch()
+            engine.submit_transfer(b, [(src.segment_id, 0, dst.segment_id, 0, block)])
+            if record is not None:
+                record.add(b)
+            engine.on_batch_done(b, lambda res: pump())
+
+        pump()

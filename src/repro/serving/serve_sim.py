@@ -35,7 +35,9 @@ class ServeSimConfig:
 class ServeStats:
     input_throughput: float  # input tokens / s
     avg_ttft: float
+    p50_ttft: float
     p90_ttft: float
+    p99_ttft: float
     round_avg_ttft: Dict[int, float]
     total_input_tokens: int
     makespan: float
@@ -108,7 +110,9 @@ class ServingSimulator:
         return ServeStats(
             input_throughput=total_input / makespan,
             avg_ttft=float(arr.mean()),
+            p50_ttft=float(np.percentile(arr, 50)),
             p90_ttft=float(np.percentile(arr, 90)),
+            p99_ttft=float(np.percentile(arr, 99)),
             round_avg_ttft={r: float(np.mean(v)) for r, v in per_round.items() if v},
             total_input_tokens=total_input,
             makespan=makespan,

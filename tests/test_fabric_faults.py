@@ -1,0 +1,212 @@
+"""Fault-semantics unit tests for the fabric simulator and the resilience
+paths around it: abort/completion accounting, failure-detection latency,
+degrade-window bookkeeping, and the scheduler's soft-exclusion fallbacks.
+These are the primitives the scenario regression tier leans on."""
+import numpy as np
+import pytest
+
+from repro.core import Fabric, FabricSpec, TentPolicy, Topology
+from repro.core.resilience import HealthConfig, HealthMonitor
+from repro.core.scheduler import Candidate
+from repro.core.telemetry import LinkTelemetry, TelemetryStore
+from repro.core.topology import LinkDesc
+from repro.core.types import LinkClass, TentError
+
+
+def _fabric(jitter=0.0):
+    return Fabric(Topology(FabricSpec()), seed=0, jitter=jitter)
+
+
+def _nic(fabric, node=0, idx=0):
+    return fabric.topology.rdma_nic(node, idx)
+
+
+class _Recorder:
+    def __init__(self, fabric):
+        self.fabric = fabric
+        self.events = []  # (ok, err, t_callback)
+
+    def __call__(self, ok, t0, t1, err):
+        self.events.append((ok, err, self.fabric.now))
+
+
+class TestMidFlightAbort:
+    def test_exactly_one_failure_completion(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        rec = _Recorder(fab)
+        # 100 MB at 25 GB/s ~= 4 ms of service; fail the link at 1 ms.
+        fab.post(nic.link_id, None, 100 << 20, rec)
+        fab.schedule_failure(nic.link_id, at=1e-3, recover_at=10.0)
+        fab.run_until_idle()
+        assert len(rec.events) == 1
+        ok, err, _ = rec.events[0]
+        assert not ok and err == "LinkFailed"
+
+    def test_abort_releases_the_link(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        fab.post(nic.link_id, None, 100 << 20, lambda *a: None)
+        fab.schedule_failure(nic.link_id, at=1e-3, recover_at=2e-3)
+        fab.run_until_idle()
+        assert not fab.links[nic.link_id].outstanding
+        # after recovery, the link serves new work normally
+        rec = _Recorder(fab)
+        fab.post(nic.link_id, None, 1 << 20, rec)
+        fab.run_until_idle()
+        assert rec.events and rec.events[0][0]
+
+    def test_completion_after_window_opened_is_failure(self):
+        """A failure window that opens after posting but before completion
+        turns the completion into an error (no silent corruption)."""
+        fab = _fabric()
+        nic = _nic(fab)
+        rec = _Recorder(fab)
+        fab.post(nic.link_id, None, 100 << 20, rec)
+        # window opens mid-flight and closes before the nominal end: the op
+        # was in flight during a failure, so it must surface as failed
+        fab.schedule_failure(nic.link_id, at=1e-3, recover_at=2e-3)
+        fab.run_until_idle()
+        assert [e[0] for e in rec.events] == [False]
+        assert fab.links[nic.link_id].ops_failed + fab.links[nic.link_id].ops_completed <= 1
+
+
+class TestFailDetectLatency:
+    def test_post_to_failed_link_errors_after_detect_latency(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        fab.schedule_failure(nic.link_id, at=0.0, recover_at=1.0)
+        fab.run_until(0.5)
+        rec = _Recorder(fab)
+        t_post = fab.now
+        fab.post(nic.link_id, None, 1 << 20, rec)
+        fab.run_until_idle()
+        ok, err, t_cb = rec.events[0]
+        assert not ok
+        assert t_cb == pytest.approx(t_post + Fabric.FAIL_DETECT_LATENCY)
+
+    def test_abort_surfaces_after_detect_latency(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        rec = _Recorder(fab)
+        fab.post(nic.link_id, None, 100 << 20, rec)
+        fab.schedule_failure(nic.link_id, at=1e-3, recover_at=1.0)
+        fab.run_until_idle()
+        _, _, t_cb = rec.events[0]
+        assert t_cb == pytest.approx(1e-3 + Fabric.FAIL_DETECT_LATENCY)
+
+    def test_error_ordering_vs_healthy_completions(self):
+        """A short op on a healthy link posted at the failure instant
+        completes before the failed op's error surfaces (the detection
+        delay is what the engine's in-band retry must absorb)."""
+        fab = _fabric()
+        a, b = _nic(fab, 0, 0), _nic(fab, 0, 1)
+        order = []
+        fab.post(a.link_id, None, 100 << 20,
+                 lambda ok, t0, t1, err: order.append(("a", ok)))
+        fab.schedule_failure(a.link_id, at=1e-3, recover_at=1.0)
+        fab.call_at(1e-3, lambda: fab.post(
+            b.link_id, None, 1024, lambda ok, t0, t1, err: order.append(("b", ok))))
+        fab.run_until_idle()
+        assert order == [("b", True), ("a", False)]
+
+
+class TestDegradeWindows:
+    def test_multiplicative_overlap(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        link = fab.links[nic.link_id]
+        fab.schedule_degradation(nic.link_id, at=0.0, until=1.0, factor=0.5)
+        fab.schedule_degradation(nic.link_id, at=0.5, until=1.5, factor=0.5)
+        bw = nic.bandwidth
+        assert link.effective_bandwidth(0.25) == pytest.approx(0.5 * bw)
+        assert link.effective_bandwidth(0.75) == pytest.approx(0.25 * bw)
+        assert link.effective_bandwidth(1.25) == pytest.approx(0.5 * bw)
+        assert link.effective_bandwidth(2.0) == pytest.approx(bw)
+
+    def test_expired_windows_are_pruned(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        link = fab.links[nic.link_id]
+        for i in range(10):
+            fab.schedule_degradation(nic.link_id, at=i * 0.1, until=i * 0.1 + 0.05, factor=0.9)
+        assert len(link.degrade_windows) == 10
+        link.effective_bandwidth(0.57)  # six windows fully expired by now
+        assert len(link.degrade_windows) == 4
+        link.effective_bandwidth(10.0)
+        assert link.degrade_windows == []
+
+    def test_future_window_not_applied_early(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        link = fab.links[nic.link_id]
+        fab.schedule_degradation(nic.link_id, at=1.0, until=2.0, factor=0.1)
+        assert link.effective_bandwidth(0.5) == pytest.approx(nic.bandwidth)
+
+    def test_fail_window_pruning(self):
+        fab = _fabric()
+        nic = _nic(fab)
+        link = fab.links[nic.link_id]
+        fab.schedule_failure(nic.link_id, at=0.1, recover_at=0.2)
+        fab.schedule_failure(nic.link_id, at=0.4, recover_at=0.5)
+        assert not link.is_failed(0.05)
+        assert link.is_failed(0.15)
+        assert not link.is_failed(0.3)  # first window pruned
+        assert len(link.fail_windows) == 1
+        assert link.is_failed(0.45)
+        assert not link.is_failed(0.6)
+        assert link.fail_windows == []
+
+
+def _mk_tl(link_id, *, tier_bw=25e9, queued=0, excluded=False, failures=0):
+    desc = LinkDesc(link_id=link_id, node=0, link_class=LinkClass.RDMA,
+                    index=link_id, numa=0, bandwidth=tier_bw, base_latency=5e-6)
+    tl = LinkTelemetry(desc=desc)
+    tl.queued_bytes = queued
+    tl.excluded = excluded
+    tl.failures = failures
+    return tl
+
+
+class TestSoftExclusionFallback:
+    def test_all_excluded_falls_back_to_cost_model(self):
+        """Soft exclusion must not deadlock (scheduler.py): when every rail
+        is excluded, the tier-feasible cost model chooses anyway."""
+        pol = TentPolicy(store=TelemetryStore())
+        cands = [
+            Candidate(_mk_tl(0, queued=1 << 20, excluded=True), 1),
+            Candidate(_mk_tl(1, queued=0, excluded=True), 1),
+        ]
+        chosen = pol.choose(cands, 64 << 10)
+        assert chosen.link_id == 1  # least-queued wins despite exclusion
+
+    def test_tier3_only_still_raises(self):
+        pol = TentPolicy(store=TelemetryStore())
+        cands = [Candidate(_mk_tl(0, excluded=True), 3)]  # tier-3 penalty inf
+        with pytest.raises(TentError):
+            pol.choose(cands, 64 << 10)
+
+    def test_partial_exclusion_prefers_healthy(self):
+        pol = TentPolicy(store=TelemetryStore())
+        healthy = Candidate(_mk_tl(0, queued=8 << 20), 1)
+        dead = Candidate(_mk_tl(1, queued=0, excluded=True), 1)
+        assert pol.choose([healthy, dead], 64 << 10) is healthy
+
+    def test_retry_chooser_reliability_order(self):
+        mon = HealthMonitor(TelemetryStore(), HealthConfig())
+        flaky_t1 = Candidate(_mk_tl(0, failures=3), 1)
+        clean_t1 = Candidate(_mk_tl(1, failures=0), 1)
+        clean_t2 = Candidate(_mk_tl(2, failures=0), 2)
+        chosen = mon.choose_retry([clean_t2, flaky_t1, clean_t1], exclude_links=())
+        assert chosen is clean_t1  # low tier first, then fewest failures
+
+    def test_retry_chooser_excluded_fallback(self):
+        """With every candidate soft-excluded, retries still pick the
+        least-failed rail (liveness over latency, resilience.py)."""
+        mon = HealthMonitor(TelemetryStore(), HealthConfig())
+        a = Candidate(_mk_tl(0, excluded=True, failures=5), 1)
+        b = Candidate(_mk_tl(1, excluded=True, failures=1), 1)
+        assert mon.choose_retry([a, b], exclude_links=()) is b
+        # the just-failed link is hard-excluded even then
+        assert mon.choose_retry([a, b], exclude_links=(1,)) is a
+        assert mon.choose_retry([b], exclude_links=(1,)) is None

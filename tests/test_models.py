@@ -50,6 +50,7 @@ class TestSSD:
         np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 class TestMoE:
     def test_sorted_matches_dense_dispatch(self):
         cfg = get_smoke_config("dbrx-132b").with_(moe_capacity_factor=4.0)
@@ -84,6 +85,7 @@ class TestMoE:
         assert int(aux["dropped"]) < 128 * cfg.experts_per_token  # not everything dropped
 
 
+@pytest.mark.slow
 class TestDecodeConsistency:
     """prefill (decode_step replay) must agree with the parallel forward."""
 
@@ -151,6 +153,7 @@ class TestDecodeConsistency:
         )
 
 
+@pytest.mark.slow
 class TestChunkedAttention:
     @pytest.mark.parametrize("window", [0, 64])
     def test_matches_full(self, window):
@@ -178,6 +181,7 @@ class TestChunkedAttention:
         np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 class TestMoEExpertParallel:
     def test_ep_matches_sorted_single_device(self):
         """shard_map EP path must equal the sorted-dispatch path (1-device

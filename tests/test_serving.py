@@ -119,6 +119,7 @@ class TestCheckpointEngine:
         assert times["tent"] <= times["round_robin"] * 1.02, times
 
 
+@pytest.mark.slow
 class TestDisaggregation:
     @pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-370m", "hymba-1.5b"])
     def test_matches_monolithic(self, arch):

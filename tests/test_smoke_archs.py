@@ -28,6 +28,7 @@ class TestArchSmoke:
         assert cfg.source, f"{arch} must cite its source"
         assert cfg.param_count() > 0
 
+    @pytest.mark.slow
     def test_forward_and_train_step(self, arch):
         cfg = get_smoke_config(arch)
         assert cfg.num_layers <= 2 and cfg.d_model <= 512 and cfg.num_experts <= 4
@@ -49,6 +50,7 @@ class TestArchSmoke:
         l1 = loss(new_params)
         assert np.isfinite(float(l1))
 
+    @pytest.mark.slow
     def test_decode_step(self, arch):
         cfg = get_smoke_config(arch)
         params = init_params(cfg, jax.random.PRNGKey(0))

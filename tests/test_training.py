@@ -5,6 +5,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import init_params
@@ -60,6 +61,7 @@ class TestData:
 
 
 class TestTrainLoop:
+    @pytest.mark.slow
     def test_loss_decreases_smoke_model(self):
         cfg = get_smoke_config("qwen2-0.5b")
         res = train(cfg, steps=12, batch_size=2, seq_len=64, log=lambda s: None)
