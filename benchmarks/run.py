@@ -68,19 +68,37 @@ def run_figures() -> None:
         raise SystemExit(1)
 
 
-def run_scenarios(specs) -> None:
+def run_scenarios(specs, out: str | None = None) -> None:
     violated = 0
+    docs = []
     for spec in specs:
         t0 = time.time()
         report = ScenarioRunner(spec).run()
         doc = report.to_dict()
         doc["wall_seconds"] = round(time.time() - t0, 3)
+        docs.append(doc)
         print(json.dumps(doc))
         sys.stdout.flush()
         if report.violations:
             violated += 1
             for v in report.violations:
                 print(f"{spec.name}: VIOLATION: {v}", file=sys.stderr)
+    if out:
+        # one self-describing document per file, for bench trajectory
+        # tracking (BENCH_*.json): written even when scenarios violate, so
+        # regressions land in the trajectory too
+        with open(out, "w") as f:
+            json.dump(
+                {
+                    "schema": "tent-scenario-reports/v1",
+                    "generated_unix": round(time.time(), 3),
+                    "scenarios": len(docs),
+                    "violated": violated,
+                    "reports": docs,
+                },
+                f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(docs)} reports to {out}", file=sys.stderr)
     if violated:
         raise SystemExit(1)
 
@@ -94,8 +112,14 @@ def main(argv=None) -> None:
                     help="run a ScenarioSpec from a JSON file")
     ap.add_argument("--list-scenarios", action="store_true",
                     help="list the named scenario library and exit")
+    ap.add_argument("--out", metavar="PATH",
+                    help="additionally write the scenario reports to PATH as "
+                         "one JSON document (bench trajectory tracking)")
     args = ap.parse_args(argv)
 
+    if args.out and not (args.scenario or args.scenario_file):
+        ap.error("--out only applies to scenario mode "
+                 "(use --scenario or --scenario-file)")
     if args.list_scenarios:
         for n in names():
             print(f"{n:28s} {get(n).description}")
@@ -107,14 +131,14 @@ def main(argv=None) -> None:
             spec = ScenarioSpec.from_json(raw)
         except Exception as e:
             ap.error(f"invalid scenario file {args.scenario_file}: {e!r}")
-        run_scenarios([spec])
+        run_scenarios([spec], out=args.out)
         return
     if args.scenario:
         try:
             specs = [get(n) for n in names()] if args.scenario == "all" else [get(args.scenario)]
         except KeyError as e:
             ap.error(e.args[0])
-        run_scenarios(specs)
+        run_scenarios(specs, out=args.out)
         return
     run_figures()
 

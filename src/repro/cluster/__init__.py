@@ -1,0 +1,10 @@
+"""Cluster control plane: multi-engine TENT with global telemetry diffusion
+and failure-rumor gossip on one shared fabric (see README.md here)."""
+from .control_plane import ClusterParams, EngineRole, TentCluster
+from .diffusion import GlobalLoadTable
+from .membership import ClusterMembership
+
+__all__ = [
+    "ClusterParams", "EngineRole", "TentCluster",
+    "GlobalLoadTable", "ClusterMembership",
+]

@@ -1,0 +1,184 @@
+"""Cluster control plane: multiple TENT engines on one shared fabric.
+
+The paper's deployment model is one engine process per serving role —
+prefill pool, decode pool, cache tier, trainer — all moving data over the
+same physical interconnects. `TentCluster` materializes that: one
+`Topology` + `Fabric` (one virtual clock), one `TentEngine` per
+`EngineRole`, each owning a disjoint node subset, wired together by the two
+cluster services that dissolve the communication silos:
+
+  * `GlobalLoadTable` — periodic telemetry diffusion feeding every engine's
+    `TelemetryStore.global_load`, so the dormant omega term of Eq. 1
+    finally sees other engines' traffic (paper §4.2);
+  * `ClusterMembership` — failure-rumor gossip, so one engine's exclusion
+    reroutes every engine's slices before they each pay the detection
+    latency themselves (paper §4.3 at cluster scope).
+
+Both services are enabled by `ClusterParams.diffusion`; with it off the
+engines still share the wire (and contend on it) but observe each other only
+through their own telemetry — the siloed baseline the paper argues against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+from ..core.engine import EngineConfig, TentEngine
+from ..core.fabric import Fabric
+from ..core.topology import FabricSpec, Topology
+from .diffusion import GlobalLoadTable
+from .membership import ClusterMembership
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRole:
+    """One engine process: a name, the node subset it owns, its policy."""
+
+    name: str
+    nodes: Tuple[int, ...]
+    policy: str = "tent"
+
+    def __post_init__(self) -> None:
+        if not self.nodes:
+            raise ValueError(f"role {self.name!r} owns no nodes")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterParams:
+    """Control-plane knobs shared by all engines of one cluster."""
+
+    diffusion: bool = True  # master switch for both cluster services
+    global_weight: float = 0.6  # omega handed to every engine when on
+    diffusion_period: float = 0.001  # seconds between telemetry exchanges
+    diffusion_staleness: float = 0.02  # table entries older than this are dropped
+    gossip_delay: float = 0.0005  # rumor propagation latency
+
+    def __post_init__(self) -> None:
+        if self.diffusion_period > 0 and self.diffusion_staleness < self.diffusion_period:
+            # delivery is one period stale by construction; a smaller
+            # staleness horizon would silently drop every table entry
+            raise ValueError(
+                f"diffusion_staleness ({self.diffusion_staleness}) must be >= "
+                f"diffusion_period ({self.diffusion_period})")
+
+
+class TentCluster:
+    """N engines, one fabric, one virtual clock, two cluster services."""
+
+    def __init__(
+        self,
+        spec: FabricSpec,
+        roles: Sequence[EngineRole],
+        *,
+        engine_config: Optional[EngineConfig] = None,
+        params: Optional[ClusterParams] = None,
+        seed: int = 0,
+    ):
+        self.params = params or ClusterParams()
+        self.topology = Topology(spec)
+        self.fabric = Fabric(self.topology, seed=seed)
+        self.roles = tuple(roles)
+        self._validate_roles(self.roles, spec.n_nodes)
+        base = engine_config or EngineConfig()
+        omega = self.params.global_weight if self.params.diffusion else 0.0
+        self.engines: Dict[str, TentEngine] = {}
+        self._node_owner: Dict[int, str] = {}
+        for role in self.roles:
+            cfg = dataclasses.replace(
+                base, policy=role.policy, global_diffusion_weight=omega)
+            self.engines[role.name] = TentEngine(
+                topology=self.topology, fabric=self.fabric,
+                config=cfg, seed=seed, name=role.name,
+            )
+            for n in role.nodes:
+                self._node_owner[n] = role.name
+        self.diffusion: Optional[GlobalLoadTable] = None
+        self.membership: Optional[ClusterMembership] = None
+        if self.params.diffusion:
+            self.diffusion = GlobalLoadTable(
+                self.fabric, self.engines,
+                period=self.params.diffusion_period,
+                staleness=self.params.diffusion_staleness,
+            )
+            self.membership = ClusterMembership(
+                self.fabric, self.engines,
+                gossip_delay=self.params.gossip_delay,
+            )
+
+    @staticmethod
+    def _validate_roles(roles: Sequence[EngineRole], n_nodes: int) -> None:
+        names = [r.name for r in roles]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate role names in {names}")
+        owned: Dict[int, str] = {}
+        for r in roles:
+            for n in r.nodes:
+                if not 0 <= n < n_nodes:
+                    raise ValueError(
+                        f"role {r.name!r} claims node {n} outside the "
+                        f"{n_nodes}-node fabric")
+                if n in owned:
+                    raise ValueError(
+                        f"node {n} owned by both {owned[n]!r} and {r.name!r}")
+                owned[n] = r.name
+
+    # ------------------------------------------------------------------ access
+    def engine(self, name: str) -> TentEngine:
+        return self.engines[name]
+
+    def engine_for_node(self, node: int) -> TentEngine:
+        return self.engines[self._node_owner[node]]
+
+    @property
+    def now(self) -> float:
+        return self.fabric.now
+
+    @property
+    def busy(self) -> bool:
+        return any(e.open_batches > 0 for e in self.engines.values())
+
+    # ------------------------------------------------------------------ drive
+    def start(self) -> None:
+        """Arm the diffusion timer. Call after the first submissions; the
+        timer keeps itself armed while any engine has open work."""
+        if self.diffusion is not None:
+            self.diffusion.arm()
+
+    def step(self) -> bool:
+        return self.fabric.step()
+
+    def run_until_idle(self) -> None:
+        self.fabric.run_until_idle()
+
+    # ------------------------------------------------------------------ audit
+    def audit(
+        self, *, ignore: Optional[Dict[str, Iterable[int]]] = None
+    ) -> Dict[str, Dict[str, int]]:
+        """Per-engine slice accounting plus a merged `total` entry. The
+        zero-lost-slice invariant must hold on *every* engine of the
+        cluster, not just in aggregate."""
+        ignore = ignore or {}
+        out: Dict[str, Dict[str, int]] = {}
+        total = {"batches_done": 0, "batches_failed": 0, "batches_open": 0,
+                 "slices_outstanding": 0}
+        for name, e in self.engines.items():
+            a = e.audit(ignore=tuple(ignore.get(name, ())))
+            out[name] = a
+            for k in total:
+                total[k] += a[k]
+        out["total"] = total
+        return out
+
+    # ------------------------------------------------------------------ stats
+    def counters(self) -> Dict[str, int]:
+        """Cluster-wide resilience/scheduling counters, summed over engines."""
+        out = {
+            "retries": sum(e.slices_retried for e in self.engines.values()),
+            "exclusions": sum(e.health.exclusions for e in self.engines.values()),
+            "readmissions": sum(e.health.readmissions for e in self.engines.values()),
+            "substitutions": sum(e.backend_substitutions for e in self.engines.values()),
+            "diffusion_rounds": self.diffusion.rounds if self.diffusion else 0,
+            "rumors_sent": self.membership.rumors_sent if self.membership else 0,
+            "rumors_applied": self.membership.rumors_applied if self.membership else 0,
+        }
+        return out

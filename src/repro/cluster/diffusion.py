@@ -1,0 +1,80 @@
+"""Global load diffusion service (paper §4.2).
+
+In the paper every TENT engine process periodically publishes its per-NIC
+queue depths to a shared-memory table and blends a global load factor into
+Eq. 1 with weight omega. This module is that table for the simulated
+cluster: each diffusion round it collects every engine's telemetry snapshot
+(local queues plus remote-endpoint charges, `TelemetryStore.snapshot`) and
+writes into each engine's `store.global_load` the sum of *other* engines'
+footprints. Delivery is deliberately one round stale — a round first
+diffuses the previous round's snapshots, then publishes fresh ones — and
+snapshots older than `staleness` are dropped entirely, so the scheduler only
+ever acts on the kind of aged information a real shared-memory table holds.
+
+The timer rides the shared fabric's virtual clock and disarms itself when no
+engine has open work, so idle clusters quiesce and `run_until_idle` halts.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, Tuple
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
+    from ..core.engine import TentEngine
+    from ..core.fabric import Fabric
+
+
+class GlobalLoadTable:
+    """Periodic cross-engine telemetry exchange on one shared fabric."""
+
+    def __init__(
+        self,
+        fabric: "Fabric",
+        engines: Dict[str, "TentEngine"],
+        *,
+        period: float = 0.001,
+        staleness: float = 0.02,
+    ):
+        self.fabric = fabric
+        self.engines = engines
+        self.period = period
+        self.staleness = staleness
+        self.rounds = 0
+        self._armed = False
+        # engine name -> (publish time, {link_id: queued bytes})
+        self._snapshots: Dict[str, Tuple[float, Dict[int, int]]] = {}
+
+    # ------------------------------------------------------------------ timer
+    def arm(self) -> None:
+        """Start (or keep) the diffusion timer. Idempotent; call after
+        submitting work. The timer re-arms itself while any engine is busy."""
+        if self._armed or self.period <= 0:
+            return
+        self._armed = True
+        self.fabric.call_after(self.period, self._tick)
+
+    def _tick(self) -> None:
+        self._armed = False
+        self.diffuse()  # deliver LAST round's snapshots: one-period staleness
+        self.publish()
+        self.rounds += 1
+        if any(e.open_batches > 0 for e in self.engines.values()):
+            self.arm()
+
+    # ------------------------------------------------------------------ table
+    def publish(self) -> None:
+        """Every engine writes its current footprint into the table."""
+        now = self.fabric.now
+        for name, e in self.engines.items():
+            self._snapshots[name] = (now, e.store.snapshot())
+
+    def diffuse(self) -> None:
+        """Every engine reads the sum of *other* engines' fresh entries."""
+        now = self.fabric.now
+        for name, e in self.engines.items():
+            agg: Dict[int, int] = {}
+            for other, (t, snap) in self._snapshots.items():
+                if other == name or (now - t) > self.staleness:
+                    continue
+                for lid, q in snap.items():
+                    agg[lid] = agg.get(lid, 0) + q
+            e.store.global_load = agg

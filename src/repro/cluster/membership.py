@@ -1,0 +1,94 @@
+"""Cluster membership and failure-rumor propagation.
+
+One engine's data-plane observation — an explicit wire failure or an
+implicitly detected straggler — soft-excludes the suspect link(s) locally
+(paper §4.3). On a multi-engine fabric that observation is worth much more:
+every peer that would route a slice over the same endpoint is about to pay
+`FAIL_DETECT_LATENCY` plus retries to rediscover it. `ClusterMembership`
+subscribes to each engine's `HealthMonitor` exclusion/readmission hooks and
+gossips the event to all other members after a small propagation delay, so
+the whole cluster reroutes off a dying link within one rumor hop of the
+first observation — and re-integrates it the moment the observing engine's
+prober readmits it.
+
+Rumor application cannot echo by construction: rumors are applied through
+non-explicit `exclude` and non-verified `readmit`, and the health hooks fire
+only for explicit failures / probe-verified readmissions.
+
+Lifecycle: an exclusion rumor for a link suppresses repeats for
+`rumor_refresh` seconds (one outage, one rumor), then later explicit
+observations re-gossip — so a rumor that never got closed (the origin's
+prober stopped, or a blind reset readmitted locally without gossip) cannot
+permanently silence future failure news for that link. Any engine's
+probe-verified readmission closes the rumor cluster-wide.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, List
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
+    from ..core.engine import TentEngine
+    from ..core.fabric import Fabric
+
+
+class ClusterMembership:
+    """Static membership + exclusion/readmission gossip between engines."""
+
+    def __init__(
+        self,
+        fabric: "Fabric",
+        engines: Dict[str, "TentEngine"],
+        *,
+        gossip_delay: float = 0.0005,
+        rumor_refresh: float = 0.05,
+    ):
+        self.fabric = fabric
+        self.engines = engines
+        self.gossip_delay = gossip_delay
+        self.rumor_refresh = rumor_refresh
+        self.rumors_sent = 0
+        self.rumors_applied = 0
+        # Open rumors: link -> virtual time the exclusion rumor went out.
+        # Closed by any probe-verified readmission (blind periodic resets
+        # never gossip), and refreshable after `rumor_refresh` so a rumor
+        # nobody managed to close cannot suppress future failure news.
+        self._rumored: Dict[int, float] = {}
+        for name, e in engines.items():
+            e.health.on_exclude = self._hook(name, exclude=True)
+            e.health.on_readmit = self._hook(name, exclude=False)
+
+    def members(self) -> List[str]:
+        return sorted(self.engines)
+
+    # ------------------------------------------------------------------ gossip
+    def _hook(self, origin: str, *, exclude: bool):
+        def fire(link_id: int) -> None:
+            if exclude:
+                last = self._rumored.get(link_id)
+                if last is not None and self.fabric.now - last < self.rumor_refresh:
+                    return  # this outage is already rumored cluster-wide
+                self._rumored[link_id] = self.fabric.now
+            elif link_id not in self._rumored:
+                return  # local-only readmission of a never-rumored link
+            else:
+                del self._rumored[link_id]
+            self.rumors_sent += 1
+            self.fabric.call_after(
+                self.gossip_delay,
+                lambda: self._apply(origin, link_id, exclude),
+            )
+
+        return fire
+
+    def _apply(self, origin: str, link_id: int, exclude: bool) -> None:
+        # non-explicit exclude / non-verified readmit: never re-fires hooks;
+        # only count applications that actually changed a peer's state
+        for name, e in self.engines.items():
+            if name == origin:
+                continue
+            if exclude:
+                changed = e.health.exclude(link_id)
+            else:
+                changed = e.health.readmit(link_id)
+            if changed:
+                self.rumors_applied += 1

@@ -118,7 +118,9 @@ class TentEngine:
         segments: Optional[SegmentManager] = None,
         config: Optional[EngineConfig] = None,
         seed: int = 0,
+        name: str = "engine",
     ):
+        self.name = name  # tenant tag on a shared fabric (cluster deployments)
         if topology is None:
             topology = Topology(spec or FabricSpec())
         self.topology = topology
@@ -258,7 +260,13 @@ class TentEngine:
         stage = tcb.plan.current.stages[hop]
         be = self.backends[stage.backend]
         paths = be.paths(stage.src, stage.dst)
-        cands = [Candidate(self.store.ensure(p.local), p.tier) for p in paths]
+        cands = [
+            Candidate(
+                self.store.ensure(p.local), p.tier,
+                remote=self.store.ensure(p.remote) if p.remote is not None else None,
+            )
+            for p in paths
+        ]
         return cands, paths
 
     def _issue(self, sl: Slice, tcb: _TransferCB, *, retry_exclude: Sequence[int]) -> None:
@@ -295,6 +303,10 @@ class TentEngine:
         sl.state = SliceState.INFLIGHT
         sl.scheduled_link = path.local.link_id
         self._inflight += 1
+        if path.remote is not None:
+            # receiver-side accounting: published to the cluster's global
+            # load table so peer engines see the incast forming (§4.2)
+            self.store.charge_remote(path.remote.link_id, sl.length)
         extra = path.extra_latency + self.config.submission_overhead / max(self.config.post_batch, 1)
         self.fabric.post(
             path.local.link_id,
@@ -303,12 +315,15 @@ class TentEngine:
             lambda ok, t0, t1, err, i=inf: self._on_wire_complete(i, ok, t1, err),
             extra_latency=extra,
             bw_scale=path.bw_factor,
+            tenant=self.name,
         )
 
     # ----------------------------------------------------------- completion
     def _on_wire_complete(self, inf: _InflightSlice, ok: bool, t_end: float, err: str) -> None:
         self._inflight -= 1
         sl, tcb, tl = inf.sl, inf.tcb, self.store.get(inf.path.local.link_id)
+        if inf.path.remote is not None:
+            self.store.discharge_remote(inf.path.remote.link_id, sl.length)
         if ok:
             t_obs = t_end - inf.scheduled_at
             tl.on_complete(sl.length, inf.queued_at_schedule, t_obs)
@@ -323,7 +338,10 @@ class TentEngine:
                 self._finish_slice(sl, tcb, t_end)
         else:
             tl.on_cancel(sl.length)
-            self.health.on_explicit_failure(inf.path.local.link_id)
+            self.health.on_path_failure(
+                inf.path.local.link_id,
+                inf.path.remote.link_id if inf.path.remote is not None else None,
+            )
             self._arm_probe_timer()
             sl.attempts += 1
             self.slices_retried += 1
@@ -414,9 +432,16 @@ class TentEngine:
 
     def _on_probe_done(self, link_id: int, ok: bool) -> None:
         if ok:
-            self.health.readmit(link_id)
+            self.health.readmit(link_id, verified=True)
 
     # ----------------------------------------------------------- metrics
+    @property
+    def open_batches(self) -> int:
+        """Batches submitted but not yet completed/failed — the cluster
+        control plane keeps its diffusion timer armed while any engine has
+        open work."""
+        return self._open_work
+
     def audit(self, *, ignore: Optional[Sequence[int]] = None) -> Dict[str, int]:
         """Batch/slice accounting across the engine's lifetime: every slice
         ever submitted must be either completed (its batch DONE) or surfaced

@@ -37,6 +37,7 @@ class WireOp:
     end: float = 0.0
     cancelled: bool = False
     failed: bool = False
+    tenant: Optional[str] = None  # posting engine on a shared fabric
 
 
 @dataclasses.dataclass
@@ -62,6 +63,8 @@ class LinkState:
         self.bytes_completed = 0
         self.ops_completed = 0
         self.ops_failed = 0
+        # per-tenant split when several engines share the fabric (cluster)
+        self.bytes_by_tenant: Dict[str, int] = {}
 
     def effective_bandwidth(self, t: float) -> float:
         # windows are sorted by start; expired ones are pruned as the clock
@@ -176,12 +179,16 @@ class Fabric:
         *,
         extra_latency: float = 0.0,
         bw_scale: float = 1.0,
+        tenant: Optional[str] = None,
     ) -> int:
         """Post one wire operation. Returns op id. Completion is delivered
-        through the event loop (success or failure)."""
+        through the event loop (success or failure). `tenant` names the
+        posting engine when several share this fabric (per-tenant byte
+        accounting; the wire semantics are tenant-blind)."""
         op = WireOp(
             op_id=next(_op_ids), src_link=src_link, dst_link=dst_link,
             nbytes=nbytes, extra_latency=extra_latency, on_complete=on_complete,
+            tenant=tenant,
         )
         src = self.links[src_link]
         dst = self.links[dst_link] if dst_link is not None else None
@@ -234,6 +241,8 @@ class Fabric:
             return
         src.bytes_completed += op.nbytes
         src.ops_completed += 1
+        if op.tenant is not None:
+            src.bytes_by_tenant[op.tenant] = src.bytes_by_tenant.get(op.tenant, 0) + op.nbytes
         op.on_complete(True, op.start, self.now, "")
 
     def _release(self, op: WireOp) -> None:
@@ -247,3 +256,12 @@ class Fabric:
 
     def bytes_by_link(self) -> Dict[int, int]:
         return {i: l.bytes_completed for i, l in self.links.items()}
+
+    def bytes_by_tenant(self) -> Dict[str, int]:
+        """Completed bytes per posting engine across all links (multi-engine
+        clusters share one fabric; this splits the wire traffic by owner)."""
+        out: Dict[str, int] = {}
+        for l in self.links.values():
+            for tenant, b in l.bytes_by_tenant.items():
+                out[tenant] = out.get(tenant, 0) + b
+        return out

@@ -42,6 +42,10 @@ class HealthMonitor:
         self.cfg = cfg
         self.exclusions = 0
         self.readmissions = 0
+        # Cluster hooks: repro.cluster.ClusterMembership subscribes here to
+        # turn one engine's local observation into a cluster-wide rumor.
+        self.on_exclude: Callable[[int], None] | None = None
+        self.on_readmit: Callable[[int], None] | None = None
 
     # -- implicit signal (paper: the telemetry loop naturally detects
     # struggling rails as predicted completion times grow) -------------------
@@ -61,20 +65,61 @@ class HealthMonitor:
         tl = self.store.maybe(link_id)
         if tl is not None:
             tl.on_failure()
-        self.exclude(link_id)
+        self.exclude(link_id, explicit=True)
 
-    def exclude(self, link_id: int) -> None:
+    def on_path_failure(self, local_link: int, remote_link: int | None) -> None:
+        """A wire path died. The engine cannot tell which side failed, so
+        both endpoints become suspects: the local rail leaves the candidate
+        set as before, and the remote endpoint is soft-excluded too, which
+        keeps *other* local rails pairing with it out of the spray. Both are
+        probed and re-admitted independently."""
+        self.on_explicit_failure(local_link)
+        if remote_link is not None:
+            self.exclude(remote_link, explicit=True)
+
+    def exclude(self, link_id: int, *, explicit: bool = False) -> bool:
+        """Soft exclusion. Only *explicit* failures are worth a cluster
+        rumor: a wire error is a fact about the link, while an implicit
+        (slow-rail) exclusion is one engine's congestion estimate — that
+        signal already travels through the global load table, and gossiping
+        it too makes every engine herd off rails that are merely busy.
+
+        The rumor hook fires on *every* explicit failure, even when the link
+        is already excluded: an implicit exclusion escalating to a wire
+        error is news the cluster has not heard yet (the membership layer
+        deduplicates repeat rumors for the same outage).
+
+        Returns True when the link's exclusion state actually changed."""
         tl = self.store.maybe(link_id)
-        if tl is not None and not tl.excluded:
+        if tl is None:
+            return False
+        changed = not tl.excluded
+        if changed:
             tl.excluded = True
             self.exclusions += 1
+        elif not explicit:
+            return False
+        if explicit and self.on_exclude is not None:
+            self.on_exclude(link_id)
+        return changed
 
-    def readmit(self, link_id: int) -> None:
+    def readmit(self, link_id: int, *, verified: bool = False) -> bool:
+        """Re-admit an excluded rail. Only *verified* readmissions (a probe
+        actually succeeded, `verified=True`) are gossiped to the cluster —
+        the periodic state reset re-admits blindly by design, and blindly
+        clearing a failure rumor cluster-wide mid-outage would make every
+        engine take the same failure storm at once.
+
+        Returns True when the link was actually re-admitted."""
         tl = self.store.maybe(link_id)
         if tl is not None and tl.excluded:
             tl.excluded = False
             tl.reset()
             self.readmissions += 1
+            if verified and self.on_readmit is not None:
+                self.on_readmit(link_id)
+            return True
+        return False
 
     def excluded_links(self) -> List[int]:
         return [lid for lid, tl in self.store.items() if tl.excluded]
@@ -87,6 +132,7 @@ class HealthMonitor:
             c
             for c in candidates
             if not c.telemetry.excluded and c.link_id not in exclude_links
+            and not (c.remote is not None and c.remote.excluded)
             and c.tier < 99
         ]
         if not elig:

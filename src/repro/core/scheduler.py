@@ -29,10 +29,14 @@ from .types import NO_ELIGIBLE_DEVICE, TentError
 
 @dataclasses.dataclass
 class Candidate:
-    """One schedulable device (local link) with its affinity tier."""
+    """One schedulable device (local link) with its affinity tier and, for
+    two-resource paths, the remote endpoint's telemetry. The remote side
+    carries the cluster-level signals: diffused receiver load and failure
+    rumors from peer engines (paper §4.2)."""
 
     telemetry: LinkTelemetry
     tier: int
+    remote: Optional[LinkTelemetry] = None
 
     @property
     def link_id(self) -> int:
@@ -70,12 +74,18 @@ class TentPolicy(Policy):
         out = []
         for c in candidates:
             tl = c.telemetry
-            if tl.excluded:
-                out.append(float("inf"))  # soft exclusion (paper §4.3)
+            if tl.excluded or (c.remote is not None and c.remote.excluded):
+                # soft exclusion (paper §4.3); a remote exclusion typically
+                # arrives as a failure rumor from a peer engine (§4.2)
+                out.append(float("inf"))
                 continue
             queued = (
                 self.store.effective_queue(tl) if self.store is not None else float(tl.queued_bytes)
             )
+            if self.store is not None and c.remote is not None:
+                # diffused receiver-side pressure: other engines' in-flight
+                # bytes converging on the remote endpoint this path pairs with
+                queued += self.store.remote_pressure(c.remote.desc.link_id)
             t_hat = tl.beta0 + tl.beta1 * (queued + length) / tl.desc.bandwidth
             out.append(self.tier_penalty.get(c.tier, float("inf")) * t_hat)
         return out

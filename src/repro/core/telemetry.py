@@ -79,13 +79,27 @@ class LinkTelemetry:
 
 class TelemetryStore:
     """All per-link telemetry for one engine instance, plus the optional
-    cross-process global load diffusion table (paper §4.2)."""
+    cross-process global load diffusion table (paper §4.2).
+
+    The global table maps link_id -> queued bytes *other* engines have in
+    flight on that link (populated by `repro.cluster.GlobalLoadTable` or by
+    `publish_global` in shared-table setups). Because an engine schedules on
+    its *local* NICs but contends with peers on the paired *remote* NICs
+    (incast), the engine also tracks `remote_queued`: its own in-flight bytes
+    charged against remote endpoints, so peers can see the receiver-side
+    pressure through the diffusion table."""
 
     def __init__(self) -> None:
         self._links: Dict[int, LinkTelemetry] = {}
-        # Optional shared-memory analogue: link_id -> global queued bytes
+        # Shared-memory analogue: link_id -> queued bytes from OTHER engines
         self.global_load: Dict[int, int] = {}
         self.global_weight: float = 0.0  # omega_d, disabled by default
+        # This engine's in-flight bytes charged to remote endpoints.
+        self.remote_queued: Dict[int, int] = {}
+        # Own contributions currently sitting in `global_load` (shared-table
+        # mode via publish_global); subtracted on read so an engine never
+        # double-counts its own load through the table.
+        self._published: Dict[int, int] = {}
 
     def ensure(self, desc: LinkDesc) -> LinkTelemetry:
         tl = self._links.get(desc.link_id)
@@ -103,15 +117,61 @@ class TelemetryStore:
         return self._links.get(link_id)
 
     def effective_queue(self, tl: LinkTelemetry) -> float:
-        """Blend local queue with the global load factor when diffusion is on."""
+        """Local queue plus the omega-discounted global load factor. The
+        local term is exact (this engine's own accounting); the global term
+        is other engines' pressure, discounted by omega because the diffused
+        table is periodic and therefore stale (paper §4.2)."""
         if self.global_weight <= 0.0:
             return float(tl.queued_bytes)
-        g = float(self.global_load.get(tl.desc.link_id, 0))
-        return (1 - self.global_weight) * tl.queued_bytes + self.global_weight * g
+        return tl.queued_bytes + self.global_weight * self._foreign_load(tl.desc.link_id)
+
+    def remote_pressure(self, link_id: int) -> float:
+        """Omega-discounted global load on a path's *remote* endpoint — how
+        hard other engines are hitting the receiver NIC this path pairs with.
+        Zero when diffusion is off, so single-engine scoring is unchanged."""
+        if self.global_weight <= 0.0:
+            return 0.0
+        return self.global_weight * self._foreign_load(link_id)
+
+    def _foreign_load(self, link_id: int) -> float:
+        """Other engines' bytes on a link: the table entry minus whatever
+        this engine itself published into it (zero with the diffusion
+        service, which already excludes own snapshots)."""
+        g = self.global_load.get(link_id, 0) - self._published.get(link_id, 0)
+        return float(max(g, 0))
+
+    # -- cross-engine accounting (repro.cluster diffusion service) -----------
+    def charge_remote(self, link_id: int, length: int) -> None:
+        self.remote_queued[link_id] = self.remote_queued.get(link_id, 0) + length
+
+    def discharge_remote(self, link_id: int, length: int) -> None:
+        left = self.remote_queued.get(link_id, 0) - length
+        if left > 0:
+            self.remote_queued[link_id] = left
+        else:
+            self.remote_queued.pop(link_id, None)
+
+    def snapshot(self) -> Dict[int, int]:
+        """This engine's total in-flight footprint per link (local queues
+        plus remote-endpoint charges) — what it publishes to the cluster's
+        global load table each diffusion round."""
+        out = {lid: tl.queued_bytes for lid, tl in self._links.items() if tl.queued_bytes}
+        for lid, q in self.remote_queued.items():
+            if q:
+                out[lid] = out.get(lid, 0) + q
+        return out
 
     def publish_global(self) -> None:
+        """Shared-table mode: several stores point at one `global_load` dict
+        and each writes its own queue depths in. Publishing *replaces* this
+        store's previous contribution (no unbounded accumulation), and reads
+        subtract it via `_published`."""
         for lid, tl in self._links.items():
-            self.global_load[lid] = self.global_load.get(lid, 0) + tl.queued_bytes
+            prev = self._published.get(lid, 0)
+            if tl.queued_bytes or prev:
+                self.global_load[lid] = (
+                    self.global_load.get(lid, 0) - prev + tl.queued_bytes)
+                self._published[lid] = tl.queued_bytes
 
     def reset_all(self) -> None:
         for tl in self._links.values():

@@ -6,6 +6,7 @@ from .spec import (
     BackgroundSpec,
     CheckpointWorkload,
     ClosedLoopWorkload,
+    ClusterWorkload,
     EngineParams,
     Expectations,
     FaultEvent,
@@ -21,18 +22,21 @@ from .workloads import (
     add_background_turbulence,
     add_tenant_contention,
     drive_closed_loop,
+    drive_streams,
     gpu_loc,
     host_loc,
     run_closed_loop,
+    run_cluster_workload,
     run_workload,
 )
 
 __all__ = [
     "SCENARIOS", "get", "names", "PolicyReport", "ScenarioReport",
     "ScenarioRunner", "run_scenario", "BackgroundSpec", "CheckpointWorkload",
-    "ClosedLoopWorkload", "EngineParams", "Expectations", "FaultEvent",
-    "ScenarioSpec", "ServeWorkload", "TopologyParams", "degrade_ramp",
-    "flap_storm", "rail_outage", "WorkloadOutcome",
+    "ClosedLoopWorkload", "ClusterWorkload", "EngineParams", "Expectations",
+    "FaultEvent", "ScenarioSpec", "ServeWorkload", "TopologyParams",
+    "degrade_ramp", "flap_storm", "rail_outage", "WorkloadOutcome",
     "add_background_turbulence", "add_tenant_contention", "drive_closed_loop",
-    "gpu_loc", "host_loc", "run_closed_loop", "run_workload",
+    "drive_streams", "gpu_loc", "host_loc", "run_closed_loop",
+    "run_cluster_workload", "run_workload",
 ]

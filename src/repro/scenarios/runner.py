@@ -21,11 +21,12 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from ..core import LinkClass, TentEngine
-from .spec import FaultEvent, ScenarioSpec
+from .spec import ClusterWorkload, FaultEvent, ScenarioSpec
 from .workloads import (
     WorkloadOutcome,
     add_background_turbulence,
     add_tenant_contention,
+    run_cluster_workload,
     run_workload,
 )
 
@@ -102,6 +103,20 @@ class ScenarioRunner:
             config=spec.engine.to_engine_config(policy),
             seed=spec.seed,
         )
+        self._install_environment(engine)
+        tenant_batches: Set[int] = set()
+        bg = spec.background
+        if bg.tenant_streams > 0:
+            add_tenant_contention(
+                engine, streams=bg.tenant_streams, block=bg.tenant_block,
+                record=tenant_batches)
+        return engine, tenant_batches
+
+    def _install_environment(self, engine: TentEngine) -> None:
+        """The spec's fabric-level environment — heterogeneity derating,
+        fault program, background turbulence — installed through one engine's
+        topology/fabric handles (on a cluster every engine shares them)."""
+        spec = self.spec
         for nic_idx, factor in spec.topology.rail_bw_factors:
             for node in range(spec.topology.n_nodes):
                 link = engine.topology.rdma_nic(node, nic_idx)
@@ -109,17 +124,11 @@ class ScenarioRunner:
                     link.link_id, at=0.0, until=RAIL_FULL_HORIZON, factor=factor)
         for f in spec.faults:
             self._apply_fault(engine, f)
-        tenant_batches: Set[int] = set()
         bg = spec.background
         if bg.turbulence_severity > 0:
             add_background_turbulence(
                 engine, seed=bg.turbulence_seed, horizon=bg.turbulence_horizon,
                 severity=bg.turbulence_severity)
-        if bg.tenant_streams > 0:
-            add_tenant_contention(
-                engine, streams=bg.tenant_streams, block=bg.tenant_block,
-                record=tenant_batches)
-        return engine, tenant_batches
 
     @staticmethod
     def _apply_fault(engine: TentEngine, f: FaultEvent) -> None:
@@ -130,11 +139,80 @@ class ScenarioRunner:
             engine.fabric.schedule_degradation(
                 link.link_id, at=f.at, until=f.until, factor=f.factor)
 
+    # ------------------------------------------------------------- cluster
+    def build_cluster(self, policy: str):
+        """Materialize the `TentCluster` a ClusterWorkload describes: one
+        engine per role on a shared fabric, plus the spec's faults and
+        turbulence. Policy names like "tent+diffusion" enable the cluster
+        control plane (global load table + failure rumors); plain names run
+        the same engines as silos."""
+        from ..cluster import ClusterParams, EngineRole, TentCluster
+
+        spec = self.spec
+        wl = spec.workload
+        base, _, flag = policy.partition("+")
+        if flag not in ("", "diffusion"):
+            raise ValueError(
+                f"unknown cluster policy flag {flag!r} in {policy!r} "
+                "(supported: '+diffusion')")
+        roles = []
+        if wl.pattern == "kv_incast":
+            roles += [EngineRole(f"prefill{n}", (n,), base) for n in wl.producer_nodes]
+            roles.append(EngineRole("decode", tuple(wl.consumer_nodes), base))
+        else:  # ckpt_broadcast
+            roles.append(EngineRole("trainer", tuple(wl.producer_nodes), base))
+            roles += [EngineRole(f"serving{n}", (n,), base) for n in wl.consumer_nodes]
+        if wl.contender_nodes:
+            roles.append(EngineRole("cache", tuple(wl.contender_nodes), wl.contender_policy))
+        params = ClusterParams(
+            diffusion=(flag == "diffusion"),
+            global_weight=wl.global_weight,
+            diffusion_period=wl.diffusion_period,
+            diffusion_staleness=wl.diffusion_staleness,
+            gossip_delay=wl.gossip_delay,
+        )
+        if spec.background.tenant_streams > 0:
+            raise ValueError(
+                "background.tenant_streams is not supported for cluster "
+                "scenarios — model co-located tenants as the contender role "
+                "(ClusterWorkload.contender_nodes)")
+        cluster = TentCluster(
+            spec.topology.to_fabric_spec(), roles,
+            engine_config=spec.engine.to_engine_config(base),
+            params=params, seed=spec.seed,
+        )
+        self._install_environment(next(iter(cluster.engines.values())))
+        return cluster
+
     # ------------------------------------------------------------- one run
     def run_policy(self, policy: str) -> PolicyReport:
+        wl = self.spec.workload
+        if isinstance(wl, ClusterWorkload):
+            cluster = self.build_cluster(policy)
+            outcome, ignore = run_cluster_workload(cluster, wl)
+            audit = cluster.audit(ignore=ignore)["total"]
+            counters = cluster.counters()
+            extra = {
+                "engines": float(len(cluster.engines)),
+                "diffusion_rounds": float(counters.pop("diffusion_rounds")),
+                "rumors_sent": float(counters.pop("rumors_sent")),
+                "rumors_applied": float(counters.pop("rumors_applied")),
+            }
+            return self._reduce(
+                policy, fabric=cluster.fabric, audit=audit,
+                counters=counters, outcome=outcome, extra=extra)
         engine, tenant_batches = self.build_engine(policy)
-        outcome = run_workload(engine, self.spec.workload)
-        return self._reduce(policy, engine, tenant_batches, outcome)
+        outcome = run_workload(engine, wl)
+        return self._reduce(
+            policy, fabric=engine.fabric,
+            audit=engine.audit(ignore=tenant_batches),
+            counters={
+                "retries": engine.slices_retried,
+                "exclusions": engine.health.exclusions,
+                "readmissions": engine.health.readmissions,
+                "substitutions": engine.backend_substitutions,
+            },
+            outcome=outcome)
 
     def run(self) -> ScenarioReport:
         reports = {p: self.run_policy(p) for p in self.spec.policies}
@@ -149,11 +227,15 @@ class ScenarioRunner:
     def _reduce(
         self,
         policy: str,
-        engine: TentEngine,
-        tenant_batches: Set[int],
+        *,
+        fabric,
+        audit: Dict[str, int],
+        counters: Dict[str, int],
         outcome: WorkloadOutcome,
+        extra: Optional[Dict[str, float]] = None,
     ) -> PolicyReport:
-        audit = engine.audit(ignore=tenant_batches)
+        """Reduce one policy run (single engine or whole cluster: the audit
+        and resilience counters arrive pre-aggregated) to a PolicyReport."""
         lost = audit["slices_outstanding"]
         lat = np.asarray([c[2] for c in outcome.completions])
         p50, p90, p99 = (
@@ -166,7 +248,10 @@ class ScenarioRunner:
         onsets = sorted(f.at for f in self.spec.faults if f.kind == "fail")
         recovery_ms = self._recovery_ms(buckets, onsets) if onsets else -1.0
         stall_ms = self._stall_ms(outcome, onsets) if onsets else -1.0
-        rail_bytes = self._rail_bytes(engine)
+        rail_bytes = self._rail_bytes(fabric)
+        all_extra = dict(outcome.extra)
+        all_extra.update(self._class_bytes(fabric))
+        all_extra.update(extra or {})
         return PolicyReport(
             policy=policy,
             ok=audit["batches_failed"] == 0 and lost == 0,
@@ -175,10 +260,10 @@ class ScenarioRunner:
             throughput=throughput,
             requests=len(outcome.completions),
             latency_p50=p50, latency_p90=p90, latency_p99=p99,
-            retries=engine.slices_retried,
-            exclusions=engine.health.exclusions,
-            readmissions=engine.health.readmissions,
-            substitutions=engine.backend_substitutions,
+            retries=counters["retries"],
+            exclusions=counters["exclusions"],
+            readmissions=counters["readmissions"],
+            substitutions=counters["substitutions"],
             batches_failed=audit["batches_failed"],
             lost_slices=lost,
             rail_imbalance=self._imbalance(rail_bytes),
@@ -186,7 +271,7 @@ class ScenarioRunner:
             stall_ms=stall_ms,
             bytes_by_rail={name: b for (_, name), b in rail_bytes.items()},
             buckets_gbps=buckets,
-            extra=dict(outcome.extra),
+            extra=all_extra,
         )
 
     def _buckets(self, outcome: WorkloadOutcome) -> List[float]:
@@ -247,12 +332,23 @@ class ScenarioRunner:
         return worst * 1e3
 
     @staticmethod
-    def _rail_bytes(engine: TentEngine) -> Dict[Tuple[int, str], int]:
+    def _rail_bytes(fabric) -> Dict[Tuple[int, str], int]:
         return {
             (l.desc.node, l.desc.name): l.bytes_completed
-            for l in engine.fabric.links.values()
+            for l in fabric.links.values()
             if l.desc.link_class == LinkClass.RDMA
         }
+
+    @staticmethod
+    def _class_bytes(fabric) -> Dict[str, float]:
+        """Completed bytes per interconnect class ("bytes_rdma", "bytes_ub",
+        ...) — how the portability scenarios assert which fabric actually
+        carried the traffic."""
+        out: Dict[str, float] = {}
+        for l in fabric.links.values():
+            key = f"bytes_{l.desc.link_class.value}"
+            out[key] = out.get(key, 0.0) + float(l.bytes_completed)
+        return out
 
     @staticmethod
     def _imbalance(rail_bytes: Dict[Tuple[int, str], int]) -> float:

@@ -44,6 +44,8 @@ class TopologyParams:
     nic_bw: float = 25.0e9
     has_nvlink: bool = True
     has_gpudirect: bool = True
+    has_mnnvl: bool = False
+    has_ub: bool = False
     rail_bw_factors: Tuple[Tuple[int, float], ...] = ()
 
     def to_fabric_spec(self) -> FabricSpec:
@@ -53,6 +55,8 @@ class TopologyParams:
             nic_bw=self.nic_bw,
             has_nvlink=self.has_nvlink,
             has_gpudirect=self.has_gpudirect,
+            has_mnnvl=self.has_mnnvl,
+            has_ub=self.has_ub,
         )
 
     @classmethod
@@ -203,10 +207,73 @@ class CheckpointWorkload:
         return cls(**d)
 
 
-Workload = Union[ClosedLoopWorkload, ServeWorkload, CheckpointWorkload]
+@dataclasses.dataclass(frozen=True)
+class ClusterWorkload:
+    """Multi-engine cluster workload: a `repro.cluster.TentCluster` of
+    engines on one shared fabric/virtual clock, each owning a disjoint node
+    subset (paper's one-engine-per-role deployment model).
+
+    pattern "kv_incast":      one prefill engine per producer node ships KV
+        closed-loop into the decode-pool engine owning `consumer_nodes`,
+        while an optional cache-tier contender engine (whose static policy
+        pins its elephants to a few receiver NICs) creates cross-engine
+        pressure that siloed telemetry cannot see in advance.
+    pattern "ckpt_broadcast": a trainer engine owning `producer_nodes`
+        pushes one `nbytes` shard per consumer node in a single declarative
+        batch per round, while per-node serving engines churn KV among
+        themselves on the same rails.
+
+    Policy names of the form "<base>+diffusion" in the spec's ablation list
+    run with the cluster control plane enabled (global load table + failure
+    rumors, `global_weight` as omega); plain names run the same engines as
+    silos — that contrast is the paper's §4.2 headline experiment.
+    """
+
+    kind: ClassVar[str] = "cluster"
+    pattern: str = "kv_incast"  # "kv_incast" | "ckpt_broadcast"
+    producer_nodes: Tuple[int, ...] = (0, 1, 2)
+    consumer_nodes: Tuple[int, ...] = (3,)
+    contender_nodes: Tuple[int, ...] = ()  # () disables the cache-tier role
+    streams_per_engine: int = 2
+    block: int = 1 << 20
+    iters: int = 8
+    duration: float = 0.0
+    contender_streams: int = 2
+    contender_block: int = 16 << 20
+    contender_policy: str = "static_best2"
+    nbytes: int = 8 << 20  # ckpt_broadcast shard per consumer node
+    # control-plane knobs (used only by "+diffusion" policies)
+    diffusion_period: float = 0.001
+    diffusion_staleness: float = 0.02
+    gossip_delay: float = 0.0005
+    global_weight: float = 0.6
+
+    def __post_init__(self) -> None:
+        if self.pattern not in ("kv_incast", "ckpt_broadcast"):
+            raise ValueError(f"unknown cluster pattern {self.pattern!r}")
+        if not self.producer_nodes or not self.consumer_nodes:
+            raise ValueError("cluster workload needs producers and consumers")
+        if self.diffusion_period > 0 and self.diffusion_staleness < self.diffusion_period:
+            # snapshots are delivered one period stale by construction, so a
+            # staleness horizon below the period silently drops every entry
+            raise ValueError(
+                f"diffusion_staleness ({self.diffusion_staleness}) must be >= "
+                f"diffusion_period ({self.diffusion_period})")
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ClusterWorkload":
+        d = dict(d)
+        for key in ("producer_nodes", "consumer_nodes", "contender_nodes"):
+            if key in d:
+                d[key] = tuple(int(v) for v in d[key])
+        return cls(**d)
+
+
+Workload = Union[ClosedLoopWorkload, ServeWorkload, CheckpointWorkload, ClusterWorkload]
 
 WORKLOAD_KINDS: Dict[str, type] = {
-    w.kind: w for w in (ClosedLoopWorkload, ServeWorkload, CheckpointWorkload)
+    w.kind: w
+    for w in (ClosedLoopWorkload, ServeWorkload, CheckpointWorkload, ClusterWorkload)
 }
 
 

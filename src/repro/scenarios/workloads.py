@@ -14,7 +14,13 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from ..core import Location, MemoryKind, TentEngine
-from .spec import CheckpointWorkload, ClosedLoopWorkload, ServeWorkload, Workload
+from .spec import (
+    CheckpointWorkload,
+    ClosedLoopWorkload,
+    ClusterWorkload,
+    ServeWorkload,
+    Workload,
+)
 
 EVENT_BUDGET = 60_000_000
 
@@ -70,46 +76,47 @@ def _stream_endpoints(engine: TentEngine, wl: ClosedLoopWorkload, i: int):
 # ---------------------------------------------------------------------------
 
 
-def drive_closed_loop(
-    engine: TentEngine,
-    streams: List[Tuple[int, int, int]],  # (src_seg_id, dst_seg_id, block_bytes)
+def drive_streams(
+    fabric,
+    streams: List[Tuple[TentEngine, List[Tuple[int, int, int]]]],
     *,
     iters: int,
-    batch_size: int = 1,
     duration: float = 0.0,
 ) -> WorkloadOutcome:
-    """The TEBench submission loop: each stream keeps exactly one batch of
-    `batch_size` transfers in flight, resubmitting on completion — `iters`
-    times, or until `duration` on the virtual clock when set. Shared by the
-    scenario runner and benchmarks/common.py."""
+    """The generalized TEBench submission loop on one (possibly shared)
+    fabric: each stream is (owning engine, [(src_seg, dst_seg, nbytes), ...])
+    and keeps exactly one batch of those transfers in flight, resubmitting on
+    completion — `iters` times, or until `duration` on the virtual clock when
+    set. Single-engine closed loops and multi-engine cluster workloads both
+    reduce to this."""
     completions: List[Tuple[float, int, float]] = []
     pending: Set[int] = set()
     done = [0] * len(streams)
     bytes_total = 0
-    t_start = engine.fabric.now
+    t_start = fabric.now
     timed = duration > 0
     deadline = t_start + duration  # duration is relative to the current clock
 
     def submit(i: int) -> None:
         nonlocal bytes_total
-        if timed and engine.fabric.now >= deadline:
+        if timed and fabric.now >= deadline:
             return
-        src, dst, block = streams[i]
-        b = engine.allocate_batch()
-        t0 = engine.fabric.now
-        engine.submit_transfer(b, [(src, 0, dst, 0, block)] * batch_size)
+        eng, transfers = streams[i]
+        nbytes = sum(t[2] for t in transfers)
+        b = eng.allocate_batch()
+        t0 = fabric.now
+        eng.submit_transfer(b, [(s, 0, d, 0, n) for (s, d, n) in transfers])
         pending.add(b)
-        bytes_total += block * batch_size
+        bytes_total += nbytes
 
-        def on_done(res, i=i, b=b, t0=t0, block=block):
+        def on_done(res, i=i, b=b, t0=t0, nbytes=nbytes):
             pending.discard(b)
-            completions.append((engine.fabric.now, block * batch_size,
-                                engine.fabric.now - t0))
+            completions.append((fabric.now, nbytes, fabric.now - t0))
             done[i] += 1
             if timed or done[i] < iters:
                 submit(i)
 
-        engine.on_batch_done(b, on_done)
+        eng.on_batch_done(b, on_done)
 
     for i in range(len(streams)):
         submit(i)
@@ -121,7 +128,7 @@ def drive_closed_loop(
 
     guard = 0
     while active():
-        if not engine.fabric.step():
+        if not fabric.step():
             raise RuntimeError("fabric idle before workload completed")
         guard += 1
         if guard > EVENT_BUDGET:
@@ -129,8 +136,25 @@ def drive_closed_loop(
     return WorkloadOutcome(
         completions=completions,
         bytes_total=bytes_total,
-        makespan=engine.fabric.now - t_start,
+        makespan=fabric.now - t_start,
     )
+
+
+def drive_closed_loop(
+    engine: TentEngine,
+    streams: List[Tuple[int, int, int]],  # (src_seg_id, dst_seg_id, block_bytes)
+    *,
+    iters: int,
+    batch_size: int = 1,
+    duration: float = 0.0,
+) -> WorkloadOutcome:
+    """The single-engine TEBench loop: each stream keeps one batch of
+    `batch_size` identical transfers in flight. Shared by the scenario
+    runner and benchmarks/common.py."""
+    flat = [
+        (engine, [(src, dst, block)] * batch_size) for (src, dst, block) in streams
+    ]
+    return drive_streams(engine.fabric, flat, iters=iters, duration=duration)
 
 
 def run_closed_loop(engine: TentEngine, wl: ClosedLoopWorkload) -> WorkloadOutcome:
@@ -239,7 +263,95 @@ def run_workload(engine: TentEngine, wl: Workload) -> WorkloadOutcome:
         return run_serve(engine, wl)
     if isinstance(wl, CheckpointWorkload):
         return run_checkpoint(engine, wl)
+    if isinstance(wl, ClusterWorkload):
+        raise TypeError(
+            "ClusterWorkload needs a TentCluster; use run_cluster_workload "
+            "(ScenarioRunner.run_policy dispatches there automatically)")
     raise TypeError(f"unknown workload {type(wl).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Multi-engine cluster executor
+# ---------------------------------------------------------------------------
+
+
+def _pump_cluster_contender(cluster, wl: ClusterWorkload, ignore: Dict[str, Set[int]]) -> None:
+    """The cache-tier contender: open-ended elephant flows from the cache
+    node(s) into the consumer pool, submitted through the contender's own
+    engine (typically a statically ranked policy that pins a few receiver
+    NICs). Batch ids are recorded so workload metrics and audits can separate
+    this background pressure from the traffic under test."""
+    eng = cluster.engines["cache"]
+    rec = ignore.setdefault("cache", set())
+    for cn in wl.contender_nodes:
+        for s in range(wl.contender_streams):
+            numa = s % 2
+            src = eng.register_segment(
+                host_loc(cn, numa), wl.contender_block, materialize=False)
+            dst = eng.register_segment(
+                host_loc(wl.consumer_nodes[s % len(wl.consumer_nodes)], numa),
+                wl.contender_block, materialize=False)
+
+            def pump(src=src, dst=dst):
+                b = eng.allocate_batch()
+                eng.submit_transfer(
+                    b, [(src.segment_id, 0, dst.segment_id, 0, wl.contender_block)])
+                rec.add(b)
+                eng.on_batch_done(b, lambda res: pump())
+
+            pump()
+
+
+def run_cluster_workload(
+    cluster, wl: ClusterWorkload
+) -> Tuple[WorkloadOutcome, Dict[str, Set[int]]]:
+    """Drive a ClusterWorkload on a built `repro.cluster.TentCluster`.
+    Returns the outcome plus per-engine batch ids to exclude from audits
+    (open-ended contender flows)."""
+    ignore: Dict[str, Set[int]] = {}
+    streams: List[Tuple[TentEngine, List[Tuple[int, int, int]]]] = []
+    if wl.pattern == "kv_incast":
+        # many prefill engines -> few decode nodes (receiver-side incast)
+        for i, node in enumerate(wl.producer_nodes):
+            eng = cluster.engines[f"prefill{node}"]
+            for s in range(wl.streams_per_engine):
+                numa = s % 2
+                src = eng.register_segment(
+                    host_loc(node, numa), wl.block, materialize=False)
+                cnode = wl.consumer_nodes[(i + s) % len(wl.consumer_nodes)]
+                dst = eng.register_segment(
+                    host_loc(cnode, numa), wl.block, materialize=False)
+                streams.append((eng, [(src.segment_id, dst.segment_id, wl.block)]))
+    else:  # ckpt_broadcast
+        # trainer pushes one shard per consumer node in one declarative
+        # batch, striping shard sources across its staging (producer) nodes
+        tr = cluster.engines["trainer"]
+        transfers = []
+        for i, cnode in enumerate(wl.consumer_nodes):
+            tnode = wl.producer_nodes[i % len(wl.producer_nodes)]
+            src = tr.register_segment(
+                host_loc(tnode, cnode % 2), wl.nbytes, materialize=False)
+            dst = tr.register_segment(
+                host_loc(cnode, cnode % 2), wl.nbytes, materialize=False)
+            transfers.append((src.segment_id, dst.segment_id, wl.nbytes))
+        streams.append((tr, transfers))
+        # serving engines churn KV among themselves on the same rails
+        for i, cnode in enumerate(wl.consumer_nodes):
+            eng = cluster.engines[f"serving{cnode}"]
+            nxt = wl.consumer_nodes[(i + 1) % len(wl.consumer_nodes)]
+            for s in range(wl.streams_per_engine):
+                numa = s % 2
+                src = eng.register_segment(
+                    host_loc(cnode, numa), wl.block, materialize=False)
+                dst = eng.register_segment(
+                    host_loc(nxt, numa), wl.block, materialize=False)
+                streams.append((eng, [(src.segment_id, dst.segment_id, wl.block)]))
+    if wl.contender_nodes:
+        _pump_cluster_contender(cluster, wl, ignore)
+    cluster.start()  # arm the diffusion timer now that work is in flight
+    outcome = drive_streams(
+        cluster.fabric, streams, iters=wl.iters, duration=wl.duration)
+    return outcome, ignore
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,453 @@
+"""Cluster control plane: the omega blend path of the predictive model,
+the global load diffusion table, failure-rumor propagation, and the
+multi-engine scenario acceptance claims (diffusion-ON tent strictly beating
+diffusion-OFF tent under cross-engine incast, cluster-wide sub-50 ms virtual
+healing, zero lost slices on every engine)."""
+import dataclasses
+
+import pytest
+
+from repro.cluster import ClusterParams, EngineRole, TentCluster
+from repro.core import (
+    Candidate,
+    EngineConfig,
+    FabricSpec,
+    TelemetryStore,
+    TentEngine,
+    TentPolicy,
+    Topology,
+)
+from repro.scenarios import (
+    ScenarioRunner,
+    get,
+    host_loc,
+    run_cluster_workload,
+)
+
+
+def _store_with_links(n=4):
+    store = TelemetryStore()
+    topo = Topology(FabricSpec())
+    tls = [store.ensure(l) for l in topo.links[:n]]
+    return store, tls
+
+
+# ---------------------------------------------------------------------------
+# Omega blend (global_diffusion_weight > 0) — previously dormant, untested
+# ---------------------------------------------------------------------------
+
+
+class TestOmegaBlend:
+    def test_effective_queue_adds_discounted_global_load(self):
+        store, (tl, *_) = _store_with_links(1)
+        tl.queued_bytes = 100
+        assert store.effective_queue(tl) == 100.0  # omega off: local only
+        store.global_weight = 0.5
+        store.global_load[tl.desc.link_id] = 200
+        assert store.effective_queue(tl) == 100 + 0.5 * 200
+
+    def test_remote_pressure_gated_by_omega(self):
+        store, (tl, *_) = _store_with_links(1)
+        store.global_load[tl.desc.link_id] = 1000
+        assert store.remote_pressure(tl.desc.link_id) == 0.0  # omega off
+        store.global_weight = 0.6
+        assert store.remote_pressure(tl.desc.link_id) == pytest.approx(600.0)
+
+    def test_scores_penalize_globally_loaded_local_link(self):
+        store, (a, b) = _store_with_links(2)
+        store.global_weight = 0.6
+        store.global_load[a.desc.link_id] = 64 << 20
+        pol = TentPolicy(store=store)
+        sa, sb = pol.scores([Candidate(a, 1), Candidate(b, 1)], 64 << 10)
+        assert sa > sb
+
+    def test_scores_penalize_remotely_loaded_path(self):
+        store, (a, b, ra, rb) = _store_with_links(4)
+        store.global_weight = 0.6
+        store.global_load[ra.desc.link_id] = 64 << 20  # peers hammer a's remote
+        pol = TentPolicy(store=store)
+        sa, sb = pol.scores(
+            [Candidate(a, 1, remote=ra), Candidate(b, 1, remote=rb)], 64 << 10)
+        assert sa > sb
+
+    def test_placement_shifts_away_from_remotely_loaded_links(self):
+        """An engine with omega > 0 must steer slices off local rails whose
+        *remote* endpoints the global table reports as loaded — the receiver
+        side of an incast its own telemetry cannot see."""
+        def run(omega):
+            engine = TentEngine(
+                FabricSpec(), config=EngineConfig(global_diffusion_weight=omega))
+            if omega > 0:
+                for nic in engine.topology.rdma_nics(1)[:4]:  # remote NICs 0-3
+                    engine.store.global_load[nic.link_id] = 1 << 30
+            src = engine.register_segment(host_loc(0, 0), 8 << 20, materialize=False)
+            dst = engine.register_segment(host_loc(1, 0), 8 << 20, materialize=False)
+            engine.transfer_sync(src.segment_id, 0, dst.segment_id, 0, 8 << 20)
+            by_link = engine.bytes_by_link()
+            nics = engine.topology.rdma_nics(0)
+            loaded = sum(by_link[n.link_id] for n in nics[:4])
+            clean = sum(by_link[n.link_id] for n in nics[4:])
+            return loaded, clean
+
+        loaded_on, clean_on = run(omega=0.6)
+        assert loaded_on == 0 and clean_on == 8 << 20
+        loaded_off, _ = run(omega=0.0)
+        assert loaded_off > 0  # same table ignored without omega
+
+    def test_rumored_remote_exclusion_blocks_the_path(self):
+        engine = TentEngine(FabricSpec())
+        remote0 = engine.topology.rdma_nic(1, 0)
+        engine.health.exclude(remote0.link_id)  # as a rumor would
+        src = engine.register_segment(host_loc(0, 0), 4 << 20, materialize=False)
+        dst = engine.register_segment(host_loc(1, 0), 4 << 20, materialize=False)
+        res = engine.transfer_sync(src.segment_id, 0, dst.segment_id, 0, 4 << 20)
+        assert res.ok
+        local0 = engine.topology.rdma_nic(0, 0)
+        assert engine.bytes_by_link()[local0.link_id] == 0
+
+    def test_shared_table_never_double_counts_own_load(self):
+        """publish_global shared-table mode: an engine's own published
+        entries must not inflate its own scores, and republishing replaces
+        (not accumulates) its contribution."""
+        store, (tl, other) = _store_with_links(2)
+        store.global_weight = 0.5
+        tl.queued_bytes = 100
+        store.publish_global()
+        assert store.global_load[tl.desc.link_id] == 100
+        assert store.effective_queue(tl) == 100.0  # own load counted once
+        assert store.remote_pressure(tl.desc.link_id) == 0.0
+        store.publish_global()
+        store.publish_global()
+        assert store.global_load[tl.desc.link_id] == 100  # no accumulation
+        tl.queued_bytes = 40
+        store.publish_global()
+        assert store.global_load[tl.desc.link_id] == 40  # replaced
+
+    def test_snapshot_merges_local_and_remote_charges(self):
+        store, (a, b) = _store_with_links(2)
+        a.queued_bytes = 100
+        store.charge_remote(b.desc.link_id, 70)
+        store.charge_remote(a.desc.link_id, 5)
+        assert store.snapshot() == {a.desc.link_id: 105, b.desc.link_id: 70}
+        store.discharge_remote(b.desc.link_id, 70)
+        assert store.snapshot() == {a.desc.link_id: 105}
+
+
+# ---------------------------------------------------------------------------
+# TentCluster construction
+# ---------------------------------------------------------------------------
+
+
+class TestTentCluster:
+    def test_disjoint_role_ownership_enforced(self):
+        spec = FabricSpec(n_nodes=2)
+        with pytest.raises(ValueError, match="owned by both"):
+            TentCluster(spec, [EngineRole("a", (0,)), EngineRole("b", (0, 1))])
+        with pytest.raises(ValueError, match="outside"):
+            TentCluster(spec, [EngineRole("a", (5,))])
+        with pytest.raises(ValueError, match="duplicate"):
+            TentCluster(spec, [EngineRole("a", (0,)), EngineRole("a", (1,))])
+        with pytest.raises(ValueError, match="owns no nodes"):
+            EngineRole("a", ())
+
+    def test_engines_share_fabric_and_clock(self):
+        cluster = TentCluster(
+            FabricSpec(n_nodes=2), [EngineRole("a", (0,)), EngineRole("b", (1,))])
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        assert a.fabric is b.fabric is cluster.fabric
+        assert cluster.engine_for_node(0) is a
+        assert cluster.engine_for_node(1) is b
+
+    def test_diffusion_switch_gates_omega_and_services(self):
+        roles = [EngineRole("a", (0,)), EngineRole("b", (1,))]
+        on = TentCluster(FabricSpec(n_nodes=2), roles,
+                         params=ClusterParams(diffusion=True, global_weight=0.7))
+        off = TentCluster(FabricSpec(n_nodes=2), roles,
+                          params=ClusterParams(diffusion=False, global_weight=0.7))
+        assert on.diffusion is not None and on.membership is not None
+        assert off.diffusion is None and off.membership is None
+        assert all(e.store.global_weight == 0.7 for e in on.engines.values())
+        assert all(e.store.global_weight == 0.0 for e in off.engines.values())
+
+    def test_per_role_policy_override(self):
+        cluster = TentCluster(
+            FabricSpec(n_nodes=2),
+            [EngineRole("a", (0,)), EngineRole("c", (1,), policy="static_best2")])
+        assert cluster.engines["a"].config.policy == "tent"
+        assert cluster.engines["c"].config.policy == "static_best2"
+
+    def test_cluster_transfer_and_tenant_accounting(self):
+        cluster = TentCluster(
+            FabricSpec(n_nodes=2), [EngineRole("a", (0,)), EngineRole("b", (1,))])
+        for name, node in (("a", 0), ("b", 1)):
+            e = cluster.engines[name]
+            src = e.register_segment(host_loc(node, 0), 1 << 20, materialize=False)
+            dst = e.register_segment(host_loc(1 - node, 0), 1 << 20, materialize=False)
+            bid = e.allocate_batch()
+            e.submit_transfer(bid, [(src.segment_id, 0, dst.segment_id, 0, 1 << 20)])
+        cluster.run_until_idle()
+        audit = cluster.audit()
+        assert audit["total"]["batches_done"] == 2
+        assert audit["total"]["slices_outstanding"] == 0
+        tenants = cluster.fabric.bytes_by_tenant()
+        assert tenants["a"] == 1 << 20 and tenants["b"] == 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# GlobalLoadTable
+# ---------------------------------------------------------------------------
+
+
+def _two_engine_cluster(**params):
+    return TentCluster(
+        FabricSpec(n_nodes=2),
+        [EngineRole("a", (0,)), EngineRole("b", (1,))],
+        params=ClusterParams(**params),
+    )
+
+
+class TestGlobalLoadTable:
+    def test_diffusion_excludes_own_footprint(self):
+        cluster = _two_engine_cluster(diffusion=True)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(0, 3).link_id
+        a.store.get(lid).queued_bytes = 1234
+        a.store.charge_remote(lid + 1, 55)
+        table = cluster.diffusion
+        table.publish()
+        table.diffuse()
+        assert b.store.global_load == {lid: 1234, lid + 1: 55}
+        assert a.store.global_load == {}  # own entries never reflected back
+
+    def test_stale_snapshots_are_dropped(self):
+        cluster = _two_engine_cluster(diffusion=True, diffusion_staleness=0.01)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(0, 0).link_id
+        a.store.get(lid).queued_bytes = 999
+        cluster.diffusion.publish()
+        cluster.fabric.run_until(0.5)  # way past the staleness horizon
+        cluster.diffusion.diffuse()
+        assert b.store.global_load == {}
+
+    def test_timer_quiesces_when_idle(self):
+        cluster = _two_engine_cluster(diffusion=True, diffusion_period=0.001)
+        cluster.start()
+        cluster.run_until_idle()  # must terminate: no open work -> no re-arm
+        assert cluster.diffusion.rounds == 1
+
+    def test_timer_runs_while_work_is_open(self):
+        cluster = _two_engine_cluster(diffusion=True, diffusion_period=0.0005)
+        e = cluster.engines["a"]
+        src = e.register_segment(host_loc(0, 0), 256 << 20, materialize=False)
+        dst = e.register_segment(host_loc(1, 0), 256 << 20, materialize=False)
+        bid = e.allocate_batch()
+        e.submit_transfer(bid, [(src.segment_id, 0, dst.segment_id, 0, 256 << 20)])
+        cluster.start()
+        res = e.wait(bid)
+        assert res.ok and cluster.diffusion.rounds >= 2
+
+
+# ---------------------------------------------------------------------------
+# Failure rumors
+# ---------------------------------------------------------------------------
+
+
+class TestFailureRumors:
+    def test_explicit_path_failure_gossips_both_suspects(self):
+        cluster = _two_engine_cluster(diffusion=True, gossip_delay=0.0005)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        local = cluster.topology.rdma_nic(0, 2).link_id
+        remote = cluster.topology.rdma_nic(1, 2).link_id
+        a.health.on_path_failure(local, remote)
+        assert cluster.membership.rumors_sent == 2
+        assert not b.store.get(local).excluded  # not before the gossip delay
+        cluster.fabric.run_until(0.001)
+        assert b.store.get(local).excluded and b.store.get(remote).excluded
+
+    def test_implicit_exclusion_stays_local(self):
+        """Slow-rail exclusions are congestion estimates; they travel through
+        the load table, not the rumor mill (no cluster-wide herding)."""
+        cluster = _two_engine_cluster(diffusion=True)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(0, 1).link_id
+        a.health.exclude(lid)  # implicit (no explicit wire error)
+        cluster.fabric.run_until(0.01)
+        assert cluster.membership.rumors_sent == 0
+        assert a.store.get(lid).excluded and not b.store.get(lid).excluded
+
+    def test_readmission_gossips_only_rumored_links(self):
+        cluster = _two_engine_cluster(diffusion=True, gossip_delay=0.0005)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        rumored = cluster.topology.rdma_nic(0, 2).link_id
+        private = cluster.topology.rdma_nic(0, 5).link_id
+        a.health.on_explicit_failure(rumored)
+        a.health.exclude(private)
+        b.health.exclude(private)  # b's own judgment about the same link
+        cluster.fabric.run_until(0.001)
+        assert b.store.get(rumored).excluded
+        a.health.readmit(rumored, verified=True)  # probe succeeded
+        a.health.readmit(private, verified=True)
+        cluster.fabric.run_until(0.002)
+        assert not b.store.get(rumored).excluded  # rumor lifecycle closed
+        assert b.store.get(private).excluded  # peer's own view untouched
+
+    def test_blind_reset_readmission_does_not_close_rumor(self):
+        """The origin's periodic state reset re-admits excluded rails
+        without probing; that must not clear the failure rumor cluster-wide
+        mid-outage — only a probe-verified readmission gossips."""
+        cluster = _two_engine_cluster(diffusion=True, gossip_delay=0.0005)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 4).link_id
+        a.health.on_explicit_failure(lid)
+        cluster.fabric.run_until(0.001)
+        assert b.store.get(lid).excluded
+        a.health.readmit(lid)  # what the reset timer does: unverified
+        cluster.fabric.run_until(0.002)
+        assert b.store.get(lid).excluded  # rumor stands until a probe passes
+        a.health.exclude(lid, explicit=True)  # origin re-observes the outage
+        a.health.readmit(lid, verified=True)  # ... and later probes it back
+        cluster.fabric.run_until(0.003)
+        assert not b.store.get(lid).excluded
+
+    def test_explicit_failure_on_implicitly_excluded_link_still_gossips(self):
+        """An implicit (slow-rail) exclusion escalating to a wire error is
+        news the cluster has not heard; the rumor must still go out."""
+        cluster = _two_engine_cluster(diffusion=True, gossip_delay=0.0005)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 5).link_id
+        a.health.exclude(lid)  # implicit: local congestion estimate
+        assert cluster.membership.rumors_sent == 0
+        a.health.on_explicit_failure(lid)  # the link then hard-fails
+        assert cluster.membership.rumors_sent == 1
+        a.health.on_explicit_failure(lid)  # repeat failures: one rumor only
+        assert cluster.membership.rumors_sent == 1
+        cluster.fabric.run_until(0.001)
+        assert b.store.get(lid).excluded
+
+    def test_peer_readmission_cannot_close_anothers_rumor(self):
+        """A peer's periodic reset (or local judgment) readmitting a
+        rumor-excluded link must not clear the failure rumor cluster-wide:
+        only the observing origin closes the lifecycle."""
+        cluster = _two_engine_cluster(diffusion=True, gossip_delay=0.0005)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 3).link_id
+        a.health.on_explicit_failure(lid)
+        cluster.fabric.run_until(0.001)
+        assert b.store.get(lid).excluded
+        sent = cluster.membership.rumors_sent
+        b.health.readmit(lid)  # what b's reset timer would do mid-outage
+        cluster.fabric.run_until(0.002)
+        assert cluster.membership.rumors_sent == sent  # no readmit gossip
+        assert a.store.get(lid).excluded  # the observer's view is intact
+
+    def test_staleness_must_cover_the_diffusion_period(self):
+        from repro.scenarios import ClusterWorkload
+
+        with pytest.raises(ValueError, match="staleness"):
+            ClusterParams(diffusion_period=0.05, diffusion_staleness=0.02)
+        with pytest.raises(ValueError, match="staleness"):
+            ClusterWorkload(diffusion_period=0.05, diffusion_staleness=0.02)
+        with pytest.raises(ValueError, match="staleness"):
+            ClusterParams(diffusion_staleness=0.0)  # would drop every entry
+
+    def test_rumor_refresh_regossips_unclosed_outages(self):
+        """A rumor that never got closed (no probe-verified readmit) must
+        not suppress failure news forever: after `rumor_refresh` a fresh
+        explicit observation re-gossips, re-protecting peers whose blind
+        resets readmitted the still-dead link."""
+        cluster = _two_engine_cluster(diffusion=True, gossip_delay=0.0005)
+        cluster.membership.rumor_refresh = 0.01
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 6).link_id
+        a.health.on_explicit_failure(lid)
+        a.health.on_explicit_failure(lid)  # same outage: suppressed
+        assert cluster.membership.rumors_sent == 1
+        cluster.fabric.run_until(0.02)
+        b.health.readmit(lid)  # b's blind reset re-admits the dead link
+        a.health.on_explicit_failure(lid)  # refresh window passed
+        assert cluster.membership.rumors_sent == 2
+        cluster.fabric.run_until(0.03)
+        assert b.store.get(lid).excluded  # peer re-protected
+
+    def test_rumor_application_does_not_echo(self):
+        cluster = _two_engine_cluster(diffusion=True, gossip_delay=0.0005)
+        a = cluster.engines["a"]
+        a.health.on_explicit_failure(cluster.topology.rdma_nic(1, 0).link_id)
+        cluster.run_until_idle()  # would livelock if rumors echoed forever
+        assert cluster.membership.rumors_sent == 1
+        assert cluster.membership.rumors_applied == 1
+
+
+# ---------------------------------------------------------------------------
+# The ISSUE acceptance claims, asserted directly on the scenario reports
+# ---------------------------------------------------------------------------
+
+
+class TestClusterScenarios:
+    def test_incast_diffusion_on_strictly_beats_off_and_baselines(self):
+        rep = ScenarioRunner(get("multi_engine_kv_incast")).run()
+        assert rep.ok, rep.violations
+        on = rep.policies["tent+diffusion"].throughput
+        off = rep.policies["tent"].throughput
+        rr = rep.policies["round_robin"].throughput
+        assert on > 1.15 * off  # silo elimination is worth real throughput
+        assert on > rr and off > rr
+        assert rep.policies["tent+diffusion"].extra["diffusion_rounds"] > 0
+
+    def test_cluster_flap_heals_within_virtual_50ms_via_rumors(self):
+        rep = ScenarioRunner(get("multi_engine_incast_flap")).run()
+        assert rep.ok, rep.violations
+        r = rep.policies["tent+diffusion"]
+        assert 0 <= r.stall_ms < 50.0
+        assert r.extra["rumors_sent"] > 0 and r.extra["rumors_applied"] > 0
+        assert r.retries > 0
+
+    def test_every_engine_audits_zero_lost_slices(self):
+        spec = get("multi_engine_kv_incast")
+        cluster = ScenarioRunner(spec).build_cluster("tent+diffusion")
+        _, ignore = run_cluster_workload(cluster, spec.workload)
+        for name, audit in cluster.audit(ignore=ignore).items():
+            assert audit["slices_outstanding"] == 0, name
+            assert audit["batches_failed"] == 0, name
+
+    def test_broadcast_diffusion_on_leads(self):
+        rep = ScenarioRunner(get("trainer_broadcast_fanout")).run()
+        assert rep.ok, rep.violations
+        on = rep.policies["tent+diffusion"].throughput
+        assert on > rep.policies["tent"].throughput
+        assert on > rep.policies["round_robin"].throughput
+
+    def test_unknown_policy_flag_rejected(self):
+        with pytest.raises(ValueError, match="policy flag"):
+            ScenarioRunner(get("multi_engine_kv_incast")).build_cluster("tent+diffuson")
+
+    def test_cluster_rejects_background_tenant_streams(self):
+        from repro.scenarios import BackgroundSpec
+
+        spec = dataclasses.replace(
+            get("multi_engine_kv_incast"),
+            background=BackgroundSpec(tenant_streams=2))
+        with pytest.raises(ValueError, match="tenant_streams"):
+            ScenarioRunner(spec).build_cluster("tent")
+
+    def test_diffusion_off_policy_runs_without_control_plane(self):
+        spec = get("multi_engine_kv_incast")
+        cluster = ScenarioRunner(spec).build_cluster("tent")
+        assert cluster.diffusion is None and cluster.membership is None
+        assert all(e.store.global_weight == 0.0 for e in cluster.engines.values())
+
+    def test_portability_scenarios_ride_their_fabric(self):
+        r = ScenarioRunner(get("mnnvl_rack_kv")).run().policies["tent"]
+        assert r.extra["bytes_mnnvl"] > 0
+        assert r.extra["bytes_mnnvl"] > 10 * r.extra["bytes_rdma"]
+        r = ScenarioRunner(get("ascend_ub_kv")).run().policies["tent"]
+        assert r.extra["bytes_ub"] > 0
+        assert r.extra["bytes_ub"] > 10 * r.extra["bytes_rdma"]
+
+    def test_cluster_workload_round_trips(self):
+        spec = get("multi_engine_kv_incast")
+        d = spec.to_dict()
+        assert d["workload"]["kind"] == "cluster"
+        from repro.scenarios import ScenarioSpec
+
+        assert ScenarioSpec.from_dict(d) == spec

@@ -1,0 +1,52 @@
+"""Smoke-run every `examples/*.py` so examples cannot silently rot.
+
+All examples are launched concurrently (they are independent processes on
+independent virtual clocks) and each test then waits on its own process, so
+the wall cost of this module is roughly the slowest single example rather
+than the sum."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+EXAMPLES = sorted((REPO / "examples").glob("*.py"))
+TIMEOUT = 600
+
+
+def test_example_set_is_discovered():
+    names = {p.name for p in EXAMPLES}
+    assert "quickstart.py" in names
+    assert "multi_engine.py" in names  # the cluster control-plane example
+    assert len(EXAMPLES) >= 5
+
+
+@pytest.fixture(scope="module")
+def example_procs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    procs = {
+        path.name: subprocess.Popen(
+            [sys.executable, str(path)], cwd=REPO, env=env, text=True,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        )
+        for path in EXAMPLES
+    }
+    yield procs
+    for p in procs.values():
+        if p.poll() is None:
+            p.kill()
+
+
+@pytest.mark.parametrize("name", [p.name for p in EXAMPLES])
+def test_example_runs_clean(example_procs, name):
+    p = example_procs[name]
+    try:
+        out, _ = p.communicate(timeout=TIMEOUT)
+    except subprocess.TimeoutExpired:
+        p.kill()
+        out, _ = p.communicate()
+        pytest.fail(f"{name} timed out after {TIMEOUT}s\n...{out[-2000:]}")
+    assert p.returncode == 0, f"{name} exited {p.returncode}\n...{out[-4000:]}"
