@@ -1,0 +1,181 @@
+# Diff two BENCH_*.json trajectory files: per-scenario deltas + regression gate.
+"""Bench trajectory diff driver.
+
+`python -m benchmarks.run --scenario all --out BENCH_<rev>.json` writes one
+self-describing document per run; this module compares two of them and
+prints, for every scenario present in both, the primary policy's throughput
+delta and the recovery/stall movement — the part of a PR's impact that a
+pass/fail test tier cannot see.
+
+    python -m benchmarks.diff BENCH_old.json BENCH_new.json
+    python -m benchmarks.diff BENCH_old.json BENCH_new.json --policy tent
+    python -m benchmarks.diff BENCH_old.json BENCH_new.json --fail-on-regression 5
+
+With `--fail-on-regression PCT` the process exits non-zero when any compared
+scenario's primary-policy throughput dropped by more than PCT percent (or a
+scenario that used to pass its expectations now violates them), so CI and
+scripted workflows can gate on trajectory health, not just correctness.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+SCHEMA = "tent-scenario-reports/v1"
+
+
+def load_reports(path: str) -> Dict[str, dict]:
+    """BENCH document -> {scenario name: report dict}. Accepts either the
+    --out document shape or a bare list of reports (forward tolerance)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict):
+        if doc.get("schema") != SCHEMA:
+            raise SystemExit(
+                f"{path}: expected schema {SCHEMA!r}, got {doc.get('schema')!r}")
+        reports = doc["reports"]
+    else:
+        reports = doc
+    return {r["scenario"]: r for r in reports}
+
+
+def primary_policy(report: dict, override: Optional[str] = None) -> Optional[str]:
+    """The policy to compare: --policy override, else the spec's primary
+    (first in the ablation list), else the first recorded policy."""
+    policies = report.get("policies", {})
+    if override is not None:
+        return override if override in policies else None
+    declared = report.get("spec", {}).get("policies") or []
+    if declared and declared[0] in policies:
+        return declared[0]
+    return next(iter(policies), None)
+
+
+def _pct(old: float, new: float) -> Optional[float]:
+    if old <= 0:
+        return None
+    return (new - old) / old * 100.0
+
+
+def _fmt_pct(p: Optional[float]) -> str:
+    return "n/a" if p is None else f"{p:+6.1f}%"
+
+
+def _fmt_ms(v: float) -> str:
+    return "-" if v < 0 else f"{v:.1f}ms"
+
+
+def diff_reports(
+    old: Dict[str, dict],
+    new: Dict[str, dict],
+    *,
+    policy: Optional[str] = None,
+) -> Tuple[List[dict], List[str], List[str], List[str]]:
+    """Rows for scenarios in both files, plus the added/removed name lists
+    and the common scenarios skipped because the compared policy was not run
+    on both sides. Each row: scenario, policy, old/new throughput, delta %,
+    recovery and stall movement, and whether expectations regressed
+    (ok -> violated)."""
+    rows: List[dict] = []
+    skipped: List[str] = []
+    for name in sorted(set(old) & set(new)):
+        o, n = old[name], new[name]
+        pol = primary_policy(n, policy)
+        if pol is None or pol not in o.get("policies", {}):
+            skipped.append(name)  # the policy was not run on both sides
+            continue
+        op, np_ = o["policies"][pol], n["policies"][pol]
+        rows.append({
+            "scenario": name,
+            "policy": pol,
+            "old_throughput": op["throughput"],
+            "new_throughput": np_["throughput"],
+            "delta_pct": _pct(op["throughput"], np_["throughput"]),
+            "old_recovery_ms": op["recovery_ms"],
+            "new_recovery_ms": np_["recovery_ms"],
+            "old_stall_ms": op["stall_ms"],
+            "new_stall_ms": np_["stall_ms"],
+            "ok_regressed": bool(o.get("ok", True)) and not bool(n.get("ok", True)),
+        })
+    added = sorted(set(new) - set(old))
+    removed = sorted(set(old) - set(new))
+    return rows, added, removed, skipped
+
+
+def render(rows: List[dict], added: List[str], removed: List[str]) -> None:
+    if rows:
+        print(f"{'scenario':28s} {'policy':16s} {'old':>10s} {'new':>10s} "
+              f"{'delta':>8s}  {'recovery':>15s}  {'stall':>15s}")
+        for r in rows:
+            rec = f"{_fmt_ms(r['old_recovery_ms'])} -> {_fmt_ms(r['new_recovery_ms'])}"
+            stall = f"{_fmt_ms(r['old_stall_ms'])} -> {_fmt_ms(r['new_stall_ms'])}"
+            flag = "  EXPECTATIONS-REGRESSED" if r["ok_regressed"] else ""
+            print(f"{r['scenario']:28s} {r['policy']:16s} "
+                  f"{r['old_throughput'] / 1e9:10.3f} "
+                  f"{r['new_throughput'] / 1e9:10.3f} "
+                  f"{_fmt_pct(r['delta_pct']):>8s}  {rec:>15s}  {stall:>15s}{flag}")
+        print("(throughput in GB/s for byte workloads, Gtok/s for serving; "
+              "recovery/stall in virtual ms, '-' = no fault onset)")
+    for name in added:
+        print(f"+ {name}: only in the new trajectory")
+    for name in removed:
+        print(f"- {name}: only in the old trajectory")
+
+
+def worst_regression(rows: List[dict]) -> Tuple[Optional[str], float]:
+    """(scenario, drop %) of the largest throughput drop; (None, 0) if none."""
+    worst, worst_name = 0.0, None
+    for r in rows:
+        if r["delta_pct"] is not None and -r["delta_pct"] > worst:
+            worst, worst_name = -r["delta_pct"], r["scenario"]
+    return worst_name, worst
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="baseline BENCH_*.json (benchmarks.run --out)")
+    ap.add_argument("new", help="candidate BENCH_*.json to compare against it")
+    ap.add_argument("--policy", metavar="NAME",
+                    help="compare this policy instead of each scenario's primary")
+    ap.add_argument("--fail-on-regression", metavar="PCT", type=float,
+                    help="exit non-zero if any scenario's throughput dropped "
+                         "more than PCT percent, or a passing scenario now "
+                         "violates its expectations")
+    args = ap.parse_args(argv)
+
+    rows, added, removed, skipped = diff_reports(
+        load_reports(args.old), load_reports(args.new), policy=args.policy)
+    if not rows and not added and not removed and not skipped:
+        raise SystemExit("no scenarios in common and nothing added/removed")
+    render(rows, added, removed)
+    for name in skipped:
+        print(f"! {name}: policy "
+              f"{args.policy or 'primary'!r} not present in both trajectories "
+              "— skipped", file=sys.stderr)
+    if args.policy is not None and not rows:
+        # a typo'd/renamed --policy must not let the gate pass on zero rows
+        raise SystemExit(
+            f"--policy {args.policy!r} matched no scenario present in both "
+            "trajectories; nothing was compared")
+
+    name, drop = worst_regression(rows)
+    if name is not None:
+        print(f"worst throughput regression: {name} -{drop:.1f}%", file=sys.stderr)
+    if args.fail_on_regression is not None:
+        broken = [r["scenario"] for r in rows if r["ok_regressed"]]
+        if broken:
+            print(f"FAIL: expectations regressed in {', '.join(broken)}",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        if name is not None and drop > args.fail_on_regression:
+            print(f"FAIL: {name} dropped {drop:.1f}% "
+                  f"(> {args.fail_on_regression:.1f}% budget)", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: no regression beyond {args.fail_on_regression:.1f}%",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

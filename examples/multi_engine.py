@@ -10,6 +10,11 @@ steers off the contended ordinals in advance. Then a decode-side NIC flaps:
 the first engine to observe the wire failure gossips it, and every peer
 reroutes before paying the detection latency itself (§4.3, cluster-wide).
 
+Then the control plane itself gets hostile: gossip messages are dropped and
+delayed (anti-entropy must close the gaps for healing to stay sub-50 ms),
+and engines join/leave mid-run (departed state garbage-collected, joiners
+bootstrapped cold through gossip).
+
 Everything is the declarative scenario subsystem: the same specs drive
 `tests/test_scenarios.py` and `python -m benchmarks.run --scenario ...`.
 
@@ -52,5 +57,28 @@ rep = ScenarioRunner(get("trainer_broadcast_fanout")).run()
 for policy, r in rep.policies.items():
     print(f"  {policy:16s} {r.throughput / 1e9:7.3f} GB/s")
 assert rep.ok, rep.violations
+
+print("\n== the crutch removed: 20% gossip loss + 5 ms delivery delay ==")
+spec = get("lossy_gossip_flap")
+rep = ScenarioRunner(spec).run()
+r = rep.policies["tent+diffusion"]
+print(f"  control plane dropped {r.extra['gossip_dropped']:.0f} of "
+      f"{r.extra['gossip_msgs']:.0f} messages; anti-entropy repaired "
+      f"{r.extra['anti_entropy_repairs']:.0f} replica gaps")
+print(f"  cluster-wide stall after onset: {r.stall_ms:.2f} ms (virtual, "
+      f"budget 50 ms) — healing survives a lossy control plane")
+assert rep.ok, rep.violations
+
+print("\n== membership churn: one engine leaves, a cold one joins ==")
+rep = ScenarioRunner(get("engine_churn_diffusion")).run()
+on, off = rep.policies["tent+diffusion"], rep.policies["tent"]
+print(f"  joins {on.extra['engines_joined']:.0f}, leaves "
+      f"{on.extra['engines_left']:.0f}; departed state GC'd, joiner "
+      f"bootstrapped via gossip")
+print(f"  diffusion still pays for itself through the churn: "
+      f"{on.throughput / off.throughput:.2f}x over siloed engines")
+assert rep.ok, rep.violations
+
 print("\nall cluster expectations hold: diffusion-ON > diffusion-OFF > "
-      "baseline, sub-50ms virtual healing, zero lost slices on every engine")
+      "baseline — with loss, delay, partial views and churn — sub-50ms "
+      "virtual healing, zero lost slices on every engine")

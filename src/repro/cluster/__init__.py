@@ -1,10 +1,12 @@
 """Cluster control plane: multi-engine TENT with global telemetry diffusion
-and failure-rumor gossip on one shared fabric (see README.md here)."""
+and failure-rumor gossip over a modeled lossy/delayed channel, partial
+membership views, and engine join/leave churn (see README.md here)."""
 from .control_plane import ClusterParams, EngineRole, TentCluster
 from .diffusion import GlobalLoadTable
+from .gossip import GossipChannel, PeerSampler
 from .membership import ClusterMembership
 
 __all__ = [
     "ClusterParams", "EngineRole", "TentCluster",
-    "GlobalLoadTable", "ClusterMembership",
+    "GlobalLoadTable", "ClusterMembership", "GossipChannel", "PeerSampler",
 ]

@@ -121,6 +121,17 @@ class HealthMonitor:
             return True
         return False
 
+    def apply_remote(self, link_id: int, *, excluded: bool) -> bool:
+        """Apply another engine's opinion about a link — the single entry
+        point for cluster rumors and anti-entropy merges. Deliberately the
+        weakest form of both transitions: a non-explicit exclude and a
+        non-verified readmit, so applying remote state can never fire the
+        gossip hooks back (no echo) and never outranks this engine's own
+        explicit observations. Returns True when local state changed."""
+        if excluded:
+            return self.exclude(link_id)
+        return self.readmit(link_id)
+
     def excluded_links(self) -> List[int]:
         return [lid for lid, tl in self.store.items() if tl.excluded]
 

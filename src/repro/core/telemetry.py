@@ -141,6 +141,22 @@ class TelemetryStore:
         return float(max(g, 0))
 
     # -- cross-engine accounting (repro.cluster diffusion service) -----------
+    def apply_global(self, agg: Dict[int, int]) -> None:
+        """Replace the diffused global-load view wholesale. The cluster's
+        `GlobalLoadTable` calls this every round (and on membership churn,
+        when a departed engine's entries are garbage-collected) with the sum
+        of the *other* live engines' in-horizon footprints — the single write
+        point for everything `effective_queue`/`remote_pressure` read, so
+        staleness pruning and departure GC cannot leave ghost pressure
+        behind."""
+        self.global_load = agg
+
+    def clear_global(self) -> None:
+        """Drop the diffused view entirely — what an engine leaving the
+        cluster does on the way out, so a later re-attach (or standalone use)
+        never schedules on a dead cluster's load table."""
+        self.global_load = {}
+
     def charge_remote(self, link_id: int, length: int) -> None:
         self.remote_queued[link_id] = self.remote_queued.get(link_id, 0) + length
 

@@ -14,10 +14,13 @@ from .spec import (
     ServeWorkload,
     TopologyParams,
     degrade_ramp,
+    engine_join,
+    engine_leave,
     flap_storm,
     rail_outage,
 )
 from .workloads import (
+    StreamDriver,
     WorkloadOutcome,
     add_background_turbulence,
     add_tenant_contention,
@@ -35,7 +38,8 @@ __all__ = [
     "ScenarioRunner", "run_scenario", "BackgroundSpec", "CheckpointWorkload",
     "ClosedLoopWorkload", "ClusterWorkload", "EngineParams", "Expectations",
     "FaultEvent", "ScenarioSpec", "ServeWorkload", "TopologyParams",
-    "degrade_ramp", "flap_storm", "rail_outage", "WorkloadOutcome",
+    "degrade_ramp", "engine_join", "engine_leave", "flap_storm",
+    "rail_outage", "StreamDriver", "WorkloadOutcome",
     "add_background_turbulence", "add_tenant_contention", "drive_closed_loop",
     "drive_streams", "gpu_loc", "host_loc", "run_closed_loop",
     "run_cluster_workload", "run_workload",

@@ -30,6 +30,8 @@ from .spec import (
     ServeWorkload,
     TopologyParams,
     degrade_ramp,
+    engine_join,
+    engine_leave,
     flap_storm,
     rail_outage,
 )
@@ -238,6 +240,55 @@ _register(ScenarioSpec(
     # incast-contended closed loop does not have; time-to-next-completion
     # (stall) is the meaningful cluster recovery bound here
     expectations=Expectations(tent_vs_baseline=1.1, max_stall_ms=50.0),
+    bucket=0.004,
+))
+
+_register(ScenarioSpec(
+    "lossy_gossip_flap",
+    "The incast flap rerun with the control-plane crutch removed: every "
+    "gossip message (telemetry snapshot, failure rumor, anti-entropy "
+    "digest) rides a channel that drops 20% of them and delays the rest by "
+    "5 ms virtual. Rumors get lost, telemetry rounds arrive stale — yet "
+    "versioned records plus anti-entropy reconciliation must still heal the "
+    "explicit wire failure cluster-wide inside the paper's 50 ms budget.",
+    topology=TopologyParams(n_nodes=5, nic_bw=1.0e9),
+    workload=dataclasses.replace(
+        _INCAST, duration=0.06, gossip_loss=0.2, gossip_link_delay=0.005),
+    faults=(FaultEvent("fail", 3, 2, at=0.02, until=0.04),),
+    policies=("tent+diffusion", "tent", "round_robin"),
+    expectations=Expectations(tent_vs_baseline=1.1, max_stall_ms=50.0),
+    bucket=0.004,
+))
+
+_register(ScenarioSpec(
+    "partial_view_incast",
+    "The cross-engine incast with partial membership views: each gossip "
+    "send addresses only a fanout-2 peer sample instead of the full roster, "
+    "so no engine ever holds an instantaneous global load picture. Entries "
+    "accumulate across rounds inside the staleness horizon and anti-entropy "
+    "fills the rumor gaps — diffusion must still pay for itself against the "
+    "siloed baseline.",
+    topology=TopologyParams(n_nodes=5, nic_bw=1.0e9),
+    workload=dataclasses.replace(_INCAST, fanout=2),
+    policies=("tent+diffusion", "tent", "round_robin"),
+    expectations=Expectations(tent_vs_baseline=1.10),
+    bucket=0.004,
+))
+
+_register(ScenarioSpec(
+    "engine_churn_diffusion",
+    "Membership churn mid-incast: one prefill engine deregisters at 15 ms "
+    "(its control-plane state must be garbage-collected — no ghost pressure "
+    "from its final published footprint) and a cold engine joins at 20 ms "
+    "on a fresh node, learning the cluster's load and open rumors only "
+    "through diffusion and anti-entropy. The control plane must keep "
+    "beating the siloed baseline >= 1.10x straight through both events.",
+    topology=TopologyParams(n_nodes=6, nic_bw=1.0e9),
+    workload=dataclasses.replace(_INCAST, duration=0.05),
+    faults=(engine_leave("prefill2", at=0.015),
+            engine_join("prefill5", 5, at=0.02)),
+    policies=("tent+diffusion", "tent", "round_robin"),
+    expectations=Expectations(tent_vs_baseline=1.10),
     bucket=0.004,
 ))
 

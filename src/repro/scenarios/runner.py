@@ -98,6 +98,10 @@ class ScenarioRunner:
         engine plus the batch ids owned by background tenants (excluded from
         the workload audit)."""
         spec = self.spec
+        if any(f.is_churn for f in spec.faults):
+            raise ValueError(
+                "join/leave churn events need a cluster workload "
+                "(ClusterWorkload) — a single engine has no membership")
         engine = TentEngine(
             spec.topology.to_fabric_spec(),
             config=spec.engine.to_engine_config(policy),
@@ -123,7 +127,8 @@ class ScenarioRunner:
                 engine.fabric.schedule_degradation(
                     link.link_id, at=0.0, until=RAIL_FULL_HORIZON, factor=factor)
         for f in spec.faults:
-            self._apply_fault(engine, f)
+            if not f.is_churn:  # join/leave are cluster events, not wire faults
+                self._apply_fault(engine, f)
         bg = spec.background
         if bg.turbulence_severity > 0:
             add_background_turbulence(
@@ -170,6 +175,9 @@ class ScenarioRunner:
             diffusion_period=wl.diffusion_period,
             diffusion_staleness=wl.diffusion_staleness,
             gossip_delay=wl.gossip_delay,
+            gossip_loss=wl.gossip_loss,
+            gossip_link_delay=wl.gossip_link_delay,
+            fanout=wl.fanout,
         )
         if spec.background.tenant_streams > 0:
             raise ValueError(
@@ -189,7 +197,10 @@ class ScenarioRunner:
         wl = self.spec.workload
         if isinstance(wl, ClusterWorkload):
             cluster = self.build_cluster(policy)
-            outcome, ignore = run_cluster_workload(cluster, wl)
+            base = policy.partition("+")[0]
+            churn = tuple(f for f in self.spec.faults if f.is_churn)
+            outcome, ignore = run_cluster_workload(
+                cluster, wl, churn, join_policy=base)
             audit = cluster.audit(ignore=ignore)["total"]
             counters = cluster.counters()
             extra = {
@@ -197,6 +208,11 @@ class ScenarioRunner:
                 "diffusion_rounds": float(counters.pop("diffusion_rounds")),
                 "rumors_sent": float(counters.pop("rumors_sent")),
                 "rumors_applied": float(counters.pop("rumors_applied")),
+                "gossip_msgs": float(counters.pop("gossip_msgs")),
+                "gossip_dropped": float(counters.pop("gossip_dropped")),
+                "anti_entropy_repairs": float(counters.pop("anti_entropy_repairs")),
+                "engines_joined": float(counters.pop("engines_joined")),
+                "engines_left": float(counters.pop("engines_left")),
             }
             return self._reduce(
                 policy, fabric=cluster.fabric, audit=audit,

@@ -75,30 +75,53 @@ class TopologyParams:
 
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
-    """One scheduled fabric fault on an RDMA rail.
+    """One scheduled fault-program event.
 
-    kind "fail":    the rail flaps down over [at, until) — in-flight slices
-                    abort (paper §2.3) and new posts error out.
-    kind "degrade": effective bandwidth is multiplied by `factor` over
-                    [at, until) — silent, only telemetry can see it.
+    kind "fail":    the rail (node, nic) flaps down over [at, until) —
+                    in-flight slices abort (paper §2.3) and new posts error.
+    kind "degrade": effective bandwidth of (node, nic) is multiplied by
+                    `factor` over [at, until) — silent, only telemetry sees it.
+    kind "join":    engine `engine` joins the cluster at `at`, owning `node`
+                    (cluster workloads only) and starts producing.
+    kind "leave":   engine `engine` departs the cluster at `at` (cluster
+                    workloads only); its streams stop resubmitting, its
+                    control-plane state is garbage-collected, and its
+                    in-flight slices drain on the data plane.
     """
 
-    kind: str  # "fail" | "degrade"
+    kind: str  # "fail" | "degrade" | "join" | "leave"
     node: int
     nic: int
     at: float
-    until: float
+    until: float = 0.0
     factor: float = 1.0
+    engine: str = ""  # churn kinds: which engine joins/leaves
 
     def __post_init__(self) -> None:
-        if self.kind not in ("fail", "degrade"):
+        if self.kind not in ("fail", "degrade", "join", "leave"):
             raise ValueError(f"unknown fault kind {self.kind!r}")
-        if self.until <= self.at:
+        if self.kind in ("fail", "degrade") and self.until <= self.at:
             raise ValueError("fault window must have until > at")
+        if self.kind in ("join", "leave") and not self.engine:
+            raise ValueError(f"churn event {self.kind!r} needs an engine name")
+
+    @property
+    def is_churn(self) -> bool:
+        return self.kind in ("join", "leave")
 
     @classmethod
     def from_dict(cls, d: dict) -> "FaultEvent":
         return cls(**d)
+
+
+def engine_join(engine: str, node: int, *, at: float) -> FaultEvent:
+    """Engine `engine` joins the cluster mid-run, owning `node`."""
+    return FaultEvent("join", node, 0, at=at, engine=engine)
+
+
+def engine_leave(engine: str, *, at: float) -> FaultEvent:
+    """Engine `engine` departs the cluster mid-run."""
+    return FaultEvent("leave", 0, 0, at=at, engine=engine)
 
 
 def flap_storm(
@@ -247,6 +270,12 @@ class ClusterWorkload:
     diffusion_staleness: float = 0.02
     gossip_delay: float = 0.0005
     global_weight: float = 0.6
+    # control-plane link model (0/0/0 = idealized lossless broadcast):
+    # per-message drop probability, per-message delivery delay (virtual s),
+    # and fanout-k partial membership views (<=0 addresses every peer)
+    gossip_loss: float = 0.0
+    gossip_link_delay: float = 0.0
+    fanout: int = 0
 
     def __post_init__(self) -> None:
         if self.pattern not in ("kv_incast", "ckpt_broadcast"):
@@ -259,6 +288,21 @@ class ClusterWorkload:
             raise ValueError(
                 f"diffusion_staleness ({self.diffusion_staleness}) must be >= "
                 f"diffusion_period ({self.diffusion_period})")
+        if not 0.0 <= self.gossip_loss < 1.0:
+            raise ValueError(f"gossip_loss must be in [0, 1), got {self.gossip_loss}")
+        if self.gossip_link_delay < 0:
+            raise ValueError(
+                f"gossip_link_delay must be >= 0, got {self.gossip_link_delay}")
+        if self.gossip_link_delay > 0 and self.diffusion_period > 0 and (
+                self.gossip_link_delay + self.diffusion_period
+                > self.diffusion_staleness):
+            # a snapshot ages one period before it ships plus the link delay
+            # in flight; past the horizon every delivery would arrive stale
+            raise ValueError(
+                f"gossip_link_delay ({self.gossip_link_delay}) + diffusion_period "
+                f"({self.diffusion_period}) must be <= diffusion_staleness "
+                f"({self.diffusion_staleness}) or every telemetry delivery "
+                "arrives stale")
 
     @classmethod
     def from_dict(cls, d: dict) -> "ClusterWorkload":

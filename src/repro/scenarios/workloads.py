@@ -9,7 +9,7 @@ scenario matrix share one implementation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -18,6 +18,7 @@ from .spec import (
     CheckpointWorkload,
     ClosedLoopWorkload,
     ClusterWorkload,
+    FaultEvent,
     ServeWorkload,
     Workload,
 )
@@ -76,6 +77,104 @@ def _stream_endpoints(engine: TentEngine, wl: ClosedLoopWorkload, i: int):
 # ---------------------------------------------------------------------------
 
 
+class StreamDriver:
+    """The generalized TEBench submission loop on one (possibly shared)
+    fabric: each stream is (owning engine, [(src_seg, dst_seg, nbytes), ...])
+    and keeps exactly one batch of those transfers in flight, resubmitting on
+    completion — `iters` times, or until `duration` on the virtual clock when
+    set. Single-engine closed loops and multi-engine cluster workloads both
+    reduce to this.
+
+    Streams may be added while the loop is running (`add_stream` from a
+    scheduled callback) — that is how an engine joining the cluster mid-run
+    starts producing. The `alive` predicate is consulted before every
+    (re)submission, so a departed engine's streams stop pumping the moment
+    it leaves while its in-flight batches still drain and count.
+    `hold_until` keeps the loop stepping through quiet gaps up to a known
+    future event (e.g. a join scheduled after the current work drains)."""
+
+    def __init__(
+        self,
+        fabric,
+        *,
+        iters: int,
+        duration: float = 0.0,
+        alive: Optional[Callable[[TentEngine], bool]] = None,
+    ):
+        self.fabric = fabric
+        self.iters = iters
+        self.timed = duration > 0
+        self.alive = alive or (lambda engine: True)
+        self.completions: List[Tuple[float, int, float]] = []
+        self.bytes_total = 0
+        self._pending: Set[int] = set()
+        self._streams: List[Tuple[TentEngine, List[Tuple[int, int, int]]]] = []
+        self._done: List[int] = []
+        self._t_start = fabric.now
+        self._deadline = self._t_start + duration  # relative to current clock
+        self._hold = self._t_start
+
+    def add_stream(
+        self, engine: TentEngine, transfers: List[Tuple[int, int, int]]
+    ) -> None:
+        self._streams.append((engine, transfers))
+        self._done.append(0)
+        self._submit(len(self._streams) - 1)
+
+    def hold_until(self, t: float) -> None:
+        """Keep the loop alive at least to virtual time `t` (a scheduled
+        churn event), even if all in-flight work drains first."""
+        self._hold = max(self._hold, t)
+
+    def _submit(self, i: int) -> None:
+        if self.timed and self.fabric.now >= self._deadline:
+            return
+        eng, transfers = self._streams[i]
+        if not self.alive(eng):
+            return
+        nbytes = sum(t[2] for t in transfers)
+        b = eng.allocate_batch()
+        t0 = self.fabric.now
+        eng.submit_transfer(b, [(s, 0, d, 0, n) for (s, d, n) in transfers])
+        self._pending.add(b)
+        self.bytes_total += nbytes
+
+        def on_done(res, i=i, b=b, t0=t0, nbytes=nbytes):
+            self._pending.discard(b)
+            self.completions.append(
+                (self.fabric.now, nbytes, self.fabric.now - t0))
+            self._done[i] += 1
+            if self.timed or self._done[i] < self.iters:
+                self._submit(i)
+
+        eng.on_batch_done(b, on_done)
+
+    def _active(self) -> bool:
+        if self._pending or self.fabric.now < self._hold:
+            return True
+        if self.timed:
+            return False
+        return any(
+            d < self.iters
+            for (eng, _), d in zip(self._streams, self._done)
+            if self.alive(eng)
+        )
+
+    def run(self) -> WorkloadOutcome:
+        guard = 0
+        while self._active():
+            if not self.fabric.step():
+                raise RuntimeError("fabric idle before workload completed")
+            guard += 1
+            if guard > EVENT_BUDGET:
+                raise RuntimeError("workload event budget exceeded")
+        return WorkloadOutcome(
+            completions=self.completions,
+            bytes_total=self.bytes_total,
+            makespan=self.fabric.now - self._t_start,
+        )
+
+
 def drive_streams(
     fabric,
     streams: List[Tuple[TentEngine, List[Tuple[int, int, int]]]],
@@ -83,61 +182,11 @@ def drive_streams(
     iters: int,
     duration: float = 0.0,
 ) -> WorkloadOutcome:
-    """The generalized TEBench submission loop on one (possibly shared)
-    fabric: each stream is (owning engine, [(src_seg, dst_seg, nbytes), ...])
-    and keeps exactly one batch of those transfers in flight, resubmitting on
-    completion — `iters` times, or until `duration` on the virtual clock when
-    set. Single-engine closed loops and multi-engine cluster workloads both
-    reduce to this."""
-    completions: List[Tuple[float, int, float]] = []
-    pending: Set[int] = set()
-    done = [0] * len(streams)
-    bytes_total = 0
-    t_start = fabric.now
-    timed = duration > 0
-    deadline = t_start + duration  # duration is relative to the current clock
-
-    def submit(i: int) -> None:
-        nonlocal bytes_total
-        if timed and fabric.now >= deadline:
-            return
-        eng, transfers = streams[i]
-        nbytes = sum(t[2] for t in transfers)
-        b = eng.allocate_batch()
-        t0 = fabric.now
-        eng.submit_transfer(b, [(s, 0, d, 0, n) for (s, d, n) in transfers])
-        pending.add(b)
-        bytes_total += nbytes
-
-        def on_done(res, i=i, b=b, t0=t0, nbytes=nbytes):
-            pending.discard(b)
-            completions.append((fabric.now, nbytes, fabric.now - t0))
-            done[i] += 1
-            if timed or done[i] < iters:
-                submit(i)
-
-        eng.on_batch_done(b, on_done)
-
-    for i in range(len(streams)):
-        submit(i)
-
-    def active() -> bool:
-        if pending:
-            return True
-        return (not timed) and any(d < iters for d in done)
-
-    guard = 0
-    while active():
-        if not fabric.step():
-            raise RuntimeError("fabric idle before workload completed")
-        guard += 1
-        if guard > EVENT_BUDGET:
-            raise RuntimeError("workload event budget exceeded")
-    return WorkloadOutcome(
-        completions=completions,
-        bytes_total=bytes_total,
-        makespan=fabric.now - t_start,
-    )
+    """Static-stream convenience wrapper over `StreamDriver`."""
+    driver = StreamDriver(fabric, iters=iters, duration=duration)
+    for eng, transfers in streams:
+        driver.add_stream(eng, transfers)
+    return driver.run()
 
 
 def drive_closed_loop(
@@ -302,26 +351,71 @@ def _pump_cluster_contender(cluster, wl: ClusterWorkload, ignore: Dict[str, Set[
             pump()
 
 
+def _producer_streams(
+    eng: TentEngine, wl: ClusterWorkload, node: int, phase: int
+) -> List[List[Tuple[int, int, int]]]:
+    """The `streams_per_engine` closed-loop KV streams one producer engine
+    on `node` ships into the consumer pool (phase staggers the consumer
+    round-robin so multiple producers spread across the pool)."""
+    out = []
+    for s in range(wl.streams_per_engine):
+        numa = s % 2
+        src = eng.register_segment(host_loc(node, numa), wl.block, materialize=False)
+        cnode = wl.consumer_nodes[(phase + s) % len(wl.consumer_nodes)]
+        dst = eng.register_segment(host_loc(cnode, numa), wl.block, materialize=False)
+        out.append([(src.segment_id, dst.segment_id, wl.block)])
+    return out
+
+
+def _schedule_churn(
+    cluster,
+    driver: StreamDriver,
+    wl: ClusterWorkload,
+    churn: Sequence[FaultEvent],
+    join_policy: str,
+) -> None:
+    """Install the fault program's join/leave events on the shared clock.
+    A leaver is removed from the control plane (its streams stop at the next
+    resubmission; in-flight batches drain and stay audited). A joiner is
+    built cold and immediately starts producing into the consumer pool —
+    the same declarative stream shape the original producers use."""
+    for i, ev in enumerate(churn):
+        driver.hold_until(ev.at)
+        if ev.kind == "leave":
+            cluster.fabric.call_at(
+                ev.at, lambda name=ev.engine: cluster.remove_engine(name))
+        else:  # join
+
+            def _join(ev=ev, phase=i):
+                eng = cluster.add_engine(ev.engine, (ev.node,), policy=join_policy)
+                for transfers in _producer_streams(eng, wl, ev.node, phase):
+                    driver.add_stream(eng, transfers)
+
+            cluster.fabric.call_at(ev.at, _join)
+
+
 def run_cluster_workload(
-    cluster, wl: ClusterWorkload
+    cluster,
+    wl: ClusterWorkload,
+    churn: Sequence[FaultEvent] = (),
+    *,
+    join_policy: str = "tent",
 ) -> Tuple[WorkloadOutcome, Dict[str, Set[int]]]:
-    """Drive a ClusterWorkload on a built `repro.cluster.TentCluster`.
-    Returns the outcome plus per-engine batch ids to exclude from audits
-    (open-ended contender flows)."""
+    """Drive a ClusterWorkload on a built `repro.cluster.TentCluster`,
+    optionally under membership churn (`churn`: the spec's join/leave
+    events). Returns the outcome plus per-engine batch ids to exclude from
+    audits (open-ended contender flows)."""
     ignore: Dict[str, Set[int]] = {}
+    driver = StreamDriver(
+        cluster.fabric, iters=wl.iters, duration=wl.duration,
+        alive=lambda eng: eng.name not in cluster.departed)
     streams: List[Tuple[TentEngine, List[Tuple[int, int, int]]]] = []
     if wl.pattern == "kv_incast":
         # many prefill engines -> few decode nodes (receiver-side incast)
         for i, node in enumerate(wl.producer_nodes):
             eng = cluster.engines[f"prefill{node}"]
-            for s in range(wl.streams_per_engine):
-                numa = s % 2
-                src = eng.register_segment(
-                    host_loc(node, numa), wl.block, materialize=False)
-                cnode = wl.consumer_nodes[(i + s) % len(wl.consumer_nodes)]
-                dst = eng.register_segment(
-                    host_loc(cnode, numa), wl.block, materialize=False)
-                streams.append((eng, [(src.segment_id, dst.segment_id, wl.block)]))
+            for transfers in _producer_streams(eng, wl, node, i):
+                streams.append((eng, transfers))
     else:  # ckpt_broadcast
         # trainer pushes one shard per consumer node in one declarative
         # batch, striping shard sources across its staging (producer) nodes
@@ -348,10 +442,12 @@ def run_cluster_workload(
                 streams.append((eng, [(src.segment_id, dst.segment_id, wl.block)]))
     if wl.contender_nodes:
         _pump_cluster_contender(cluster, wl, ignore)
+    if churn:
+        _schedule_churn(cluster, driver, wl, churn, join_policy)
     cluster.start()  # arm the diffusion timer now that work is in flight
-    outcome = drive_streams(
-        cluster.fabric, streams, iters=wl.iters, duration=wl.duration)
-    return outcome, ignore
+    for eng, transfers in streams:
+        driver.add_stream(eng, transfers)
+    return driver.run(), ignore
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,21 @@
 """Cluster control plane: the omega blend path of the predictive model,
-the global load diffusion table, failure-rumor propagation, and the
-multi-engine scenario acceptance claims (diffusion-ON tent strictly beating
-diffusion-OFF tent under cross-engine incast, cluster-wide sub-50 ms virtual
-healing, zero lost slices on every engine)."""
+the global load diffusion table, failure-rumor propagation, the lossy/
+delayed gossip channel with partial membership views and anti-entropy,
+engine join/leave churn, and the multi-engine scenario acceptance claims
+(diffusion-ON tent strictly beating diffusion-OFF tent under cross-engine
+incast — with and without loss, partial views, and churn — cluster-wide
+sub-50 ms virtual healing, zero lost slices on every engine)."""
 import dataclasses
 
 import pytest
 
-from repro.cluster import ClusterParams, EngineRole, TentCluster
+from repro.cluster import (
+    ClusterParams,
+    EngineRole,
+    GossipChannel,
+    PeerSampler,
+    TentCluster,
+)
 from repro.core import (
     Candidate,
     EngineConfig,
@@ -19,10 +27,15 @@ from repro.core import (
 )
 from repro.scenarios import (
     ScenarioRunner,
+    engine_join,
+    engine_leave,
     get,
     host_loc,
     run_cluster_workload,
 )
+
+# all gossip messages dropped, deterministically (loss must stay < 1.0)
+NEAR_TOTAL_LOSS = 1.0 - 1e-12
 
 
 def _store_with_links(n=4):
@@ -451,3 +464,366 @@ class TestClusterScenarios:
         from repro.scenarios import ScenarioSpec
 
         assert ScenarioSpec.from_dict(d) == spec
+
+
+# ---------------------------------------------------------------------------
+# The modeled gossip channel and partial membership views
+# ---------------------------------------------------------------------------
+
+
+class TestGossipChannel:
+    def test_zero_loss_zero_delay_delivers_synchronously(self):
+        cluster = _two_engine_cluster(diffusion=True)
+        ch = GossipChannel(cluster.fabric)
+        hits = []
+        assert ch.send(lambda: hits.append(cluster.fabric.now))
+        assert hits == [0.0]  # no event loop round trip, PR 2's direct path
+        assert (ch.sent, ch.dropped, ch.delivered) == (1, 0, 1)
+
+    def test_delay_schedules_on_the_virtual_clock(self):
+        cluster = _two_engine_cluster(diffusion=True)
+        ch = GossipChannel(cluster.fabric, delay=0.003)
+        hits = []
+        ch.send(lambda: hits.append(cluster.fabric.now), extra_delay=0.001)
+        assert hits == []  # in flight
+        cluster.fabric.run_until(0.01)
+        assert hits == [pytest.approx(0.004)]  # delay + extra_delay
+
+    def test_loss_drops_deterministically(self):
+        cluster = _two_engine_cluster(diffusion=True)
+        ch = GossipChannel(cluster.fabric, loss=NEAR_TOTAL_LOSS, seed=3)
+        hits = []
+        for _ in range(20):
+            ch.send(lambda: hits.append(1))
+        cluster.fabric.run_until(1.0)
+        assert hits == [] and ch.dropped == 20
+        again = GossipChannel(cluster.fabric, loss=0.5, seed=3)
+        pattern = [again.send(lambda: None) for _ in range(20)]
+        rerun = GossipChannel(cluster.fabric, loss=0.5, seed=3)
+        assert pattern == [rerun.send(lambda: None) for _ in range(20)]
+
+    def test_parameter_validation(self):
+        fabric = _two_engine_cluster(diffusion=True).fabric
+        with pytest.raises(ValueError, match="loss"):
+            GossipChannel(fabric, loss=1.0)
+        with pytest.raises(ValueError, match="delay"):
+            GossipChannel(fabric, delay=-0.001)
+        with pytest.raises(ValueError, match="gossip_loss"):
+            ClusterParams(gossip_loss=1.5)
+        with pytest.raises(ValueError, match="gossip_link_delay"):
+            ClusterParams(gossip_link_delay=-1.0)
+        with pytest.raises(ValueError, match="arrives stale"):
+            ClusterParams(gossip_link_delay=0.05)  # delay + period > staleness
+        from repro.scenarios import ClusterWorkload
+
+        with pytest.raises(ValueError, match="gossip_loss"):
+            ClusterWorkload(gossip_loss=-0.1)
+        with pytest.raises(ValueError, match="arrives stale"):
+            ClusterWorkload(gossip_link_delay=0.05)
+
+
+class TestPeerSampler:
+    def test_full_view_by_default(self):
+        s = PeerSampler()
+        for n in ("a", "b", "c"):
+            s.add(n)
+        assert s.view("a") == ("b", "c")
+        assert s.peers_of("b") == ("a", "c")
+
+    def test_fanout_limits_and_respects_roster(self):
+        s = PeerSampler(fanout=2, seed=1)
+        for n in ("a", "b", "c", "d", "e"):
+            s.add(n)
+        for _ in range(10):
+            v = s.view("a")
+            assert len(v) == 2 and "a" not in v
+        s.remove("b")
+        assert all("b" not in s.view("a") for _ in range(10))
+        # fanout covering the roster degenerates to the full view, no RNG
+        wide = PeerSampler(fanout=99, seed=1)
+        for n in ("a", "b", "c"):
+            wide.add(n)
+        assert wide.view("a") == ("b", "c")
+
+    def test_anti_entropy_partner_rotates(self):
+        s = PeerSampler()
+        for n in ("a", "b", "c"):
+            s.add(n)
+        seen = {s.anti_entropy_partner("a") for _ in range(4)}
+        assert seen == {"b", "c"}
+        lone = PeerSampler()
+        lone.add("solo")
+        assert lone.anti_entropy_partner("solo") is None
+
+
+# ---------------------------------------------------------------------------
+# Control-plane edge cases: loss + anti-entropy + staleness + churn GC
+# ---------------------------------------------------------------------------
+
+
+class TestLossyControlPlane:
+    def test_rumor_lost_then_recovered_via_anti_entropy(self):
+        """A dropped rumor leaves a peer unprotected; the next anti-entropy
+        push reconciles the replica and applies the exclusion."""
+        cluster = _two_engine_cluster(diffusion=True)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 2).link_id
+        cluster.channel.loss = NEAR_TOTAL_LOSS  # the rumor will be dropped
+        a.health.on_explicit_failure(lid)
+        cluster.fabric.run_until(0.01)
+        assert cluster.membership.rumors_sent == 1
+        assert cluster.channel.dropped >= 1
+        assert not b.store.get(lid).excluded  # the gap loss opened
+        cluster.channel.loss = 0.0  # the next reconciliation gets through
+        cluster.membership.run_anti_entropy()
+        cluster.fabric.run_until(0.02)
+        assert b.store.get(lid).excluded  # anti-entropy closed the gap
+        assert cluster.membership.anti_entropy_repairs >= 1
+
+    def test_anti_entropy_does_not_reimpose_blind_reset_divergence(self):
+        """A peer whose blind reset readmitted a rumored link diverges in
+        health *state* only — its replica still holds the rumor record, so
+        anti-entropy (same version, no news) must not re-exclude it."""
+        cluster = _two_engine_cluster(diffusion=True)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 1).link_id
+        a.health.on_explicit_failure(lid)
+        cluster.fabric.run_until(0.005)
+        assert b.store.get(lid).excluded
+        b.health.readmit(lid)  # b's periodic blind reset, mid-outage
+        for _ in range(5):
+            cluster.membership.run_anti_entropy()
+        cluster.fabric.run_until(0.01)
+        assert not b.store.get(lid).excluded  # PR 2 semantics preserved
+
+    def test_dropped_telemetry_round_honors_staleness_bound(self):
+        """When rounds are lost, a receiver schedules on its last delivered
+        snapshot only while that snapshot is inside the staleness horizon —
+        never on older ghosts."""
+        cluster = _two_engine_cluster(diffusion=True, diffusion_staleness=0.01)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(0, 0).link_id
+        a.store.get(lid).queued_bytes = 777
+        cluster.diffusion.publish()
+        cluster.diffusion.diffuse()
+        assert b.store.global_load == {lid: 777}  # delivered, fresh
+        cluster.channel.loss = NEAR_TOTAL_LOSS  # every later round drops
+        cluster.fabric.run_until(0.005)  # inside the horizon
+        cluster.diffusion.publish()
+        cluster.diffusion.diffuse()
+        assert b.store.global_load == {lid: 777}  # stale-but-valid survives
+        cluster.fabric.run_until(0.5)  # way past the horizon
+        cluster.diffusion.publish()
+        cluster.diffusion.diffuse()
+        assert b.store.global_load == {}  # the bound is honored
+
+    def test_late_delivery_cannot_overwrite_fresher_snapshot(self):
+        cluster = _two_engine_cluster(diffusion=True)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(0, 0).link_id
+        table = cluster.diffusion
+        table._receive("b", "a", t=0.002, snap={lid: 20})  # fresher, first
+        table._receive("b", "a", t=0.001, snap={lid: 10})  # reordered arrival
+        assert table._tables["b"]["a"] == (0.002, {lid: 20})
+
+    def test_lossy_channel_is_deterministic(self):
+        spec = get("lossy_gossip_flap")
+        r1 = ScenarioRunner(spec).run().to_json(sort_keys=True)
+        r2 = ScenarioRunner(spec).run().to_json(sort_keys=True)
+        assert r1 == r2
+
+    def test_full_fanout_matches_default_broadcast_exactly(self):
+        """fanout >= roster degenerates to the full view without RNG draws:
+        the physics must be identical to the default broadcast."""
+        spec = get("multi_engine_kv_incast")
+        wide = dataclasses.replace(
+            spec, workload=dataclasses.replace(spec.workload, fanout=99))
+        a = ScenarioRunner(spec).run().to_dict()["policies"]
+        b = ScenarioRunner(wide).run().to_dict()["policies"]
+        assert a == b
+
+
+class TestEngineChurn:
+    def test_add_engine_validates_ownership(self):
+        cluster = TentCluster(
+            FabricSpec(n_nodes=3), [EngineRole("a", (0,)), EngineRole("b", (1,))])
+        with pytest.raises(ValueError, match="already used"):
+            cluster.add_engine("a", (2,))
+        with pytest.raises(ValueError, match="owned by both"):
+            cluster.add_engine("c", (1,))
+        with pytest.raises(ValueError, match="outside"):
+            cluster.add_engine("c", (9,))
+        with pytest.raises(KeyError):
+            cluster.remove_engine("nope")
+
+    def test_join_wires_services_and_leave_releases_nodes(self):
+        cluster = TentCluster(
+            FabricSpec(n_nodes=3), [EngineRole("a", (0,)), EngineRole("b", (1,))],
+            params=ClusterParams(diffusion=True, global_weight=0.7))
+        c = cluster.add_engine("c", (2,))
+        assert c.store.global_weight == 0.7  # omega handed to the joiner
+        assert cluster.engine_for_node(2) is c
+        assert "c" in cluster.membership.members()
+        cluster.remove_engine("c")
+        assert "c" not in cluster.engines and "c" in cluster.departed
+        assert "c" not in cluster.membership.members()
+        late = cluster.add_engine("late", (2,))  # released node is reusable
+        assert cluster.engine_for_node(2) is late
+        with pytest.raises(ValueError, match="already used"):
+            cluster.add_engine("c", (2,))  # departed names stay reserved
+
+    def test_departed_engine_entries_are_garbage_collected(self):
+        """The satellite claim: a leaver's published footprint (including
+        receiver-side remote_queued charges) must vanish from every peer's
+        global view immediately, not at the staleness horizon."""
+        cluster = _two_engine_cluster(diffusion=True)
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 0).link_id
+        a.store.charge_remote(lid, 4096)  # a's in-flight charge on b's NIC
+        cluster.diffusion.publish()
+        cluster.diffusion.diffuse()
+        assert b.store.global_load == {lid: 4096}  # the pressure is visible
+        cluster.remove_engine("a")
+        assert b.store.global_load == {}  # ...and GC'd the moment a leaves
+        assert a.store.global_load == {}  # the leaver forgets the cluster too
+        cluster.diffusion.publish()
+        cluster.diffusion.diffuse()
+        assert b.store.global_load == {}  # no resurrection on later rounds
+
+    def test_joiner_learns_open_rumors_via_anti_entropy(self):
+        """A cold joiner holds no rumor state; reconciliation pushes from
+        established members must protect it from a known-dead link."""
+        cluster = TentCluster(
+            FabricSpec(n_nodes=3), [EngineRole("a", (0,)), EngineRole("b", (1,))],
+            params=ClusterParams(diffusion=True))
+        a = cluster.engines["a"]
+        lid = cluster.topology.rdma_nic(1, 3).link_id
+        a.health.on_explicit_failure(lid)
+        cluster.fabric.run_until(0.005)
+        c = cluster.add_engine("c", (2,))  # joins after the outage was rumored
+        assert not c.store.get(lid).excluded  # cold: no instant bootstrap
+        for _ in range(4):  # rotation reaches the joiner within a few rounds
+            cluster.membership.run_anti_entropy()
+        cluster.fabric.run_until(0.01)
+        assert c.store.get(lid).excluded
+
+    def test_rumors_to_departed_engines_drop_on_the_floor(self):
+        cluster = TentCluster(
+            FabricSpec(n_nodes=3),
+            [EngineRole("a", (0,)), EngineRole("b", (1,)), EngineRole("c", (2,))],
+            params=ClusterParams(diffusion=True, gossip_link_delay=0.002))
+        a, b = cluster.engines["a"], cluster.engines["b"]
+        lid = cluster.topology.rdma_nic(1, 5).link_id
+        a.health.on_explicit_failure(lid)  # rumor in flight to b and c
+        cluster.remove_engine("b")  # b departs before delivery
+        cluster.fabric.run_until(0.01)
+        assert not b.store.get(lid).excluded  # the in-flight rumor was void
+        assert cluster.engines["c"].store.get(lid).excluded  # c still got it
+
+    def test_join_after_quiet_gap_rearms_diffusion(self):
+        """If the cluster drained and the diffusion timer quiesced before a
+        join, the joiner must still get diffusion rounds (and anti-entropy)
+        once it has work — '+diffusion' must not silently degrade to silos."""
+        cluster = TentCluster(
+            FabricSpec(n_nodes=3), [EngineRole("a", (0,)), EngineRole("b", (1,))],
+            params=ClusterParams(diffusion=True))
+        e = cluster.engines["a"]
+        src = e.register_segment(host_loc(0, 0), 1 << 20, materialize=False)
+        dst = e.register_segment(host_loc(1, 0), 1 << 20, materialize=False)
+        bid = e.allocate_batch()
+        e.submit_transfer(bid, [(src.segment_id, 0, dst.segment_id, 0, 1 << 20)])
+        cluster.start()
+        cluster.run_until_idle()  # work drains; the timer disarms
+        rounds = cluster.diffusion.rounds
+        c = cluster.add_engine("c", (2,))
+        src = c.register_segment(host_loc(2, 0), 8 << 20, materialize=False)
+        dst = c.register_segment(host_loc(1, 0), 8 << 20, materialize=False)
+        bid = c.allocate_batch()
+        c.submit_transfer(bid, [(src.segment_id, 0, dst.segment_id, 0, 8 << 20)])
+        cluster.run_until_idle()
+        assert cluster.diffusion.rounds > rounds  # the join re-armed it
+
+    def test_roles_track_membership_through_churn(self):
+        cluster = TentCluster(
+            FabricSpec(n_nodes=3), [EngineRole("a", (0,)), EngineRole("b", (1,))])
+        cluster.remove_engine("b")
+        cluster.add_engine("c", (1,))
+        assert [r.name for r in cluster.roles] == ["a", "c"]
+        owned = [n for r in cluster.roles for n in r.nodes]
+        assert len(owned) == len(set(owned))  # no stale ownership claims
+
+    def test_leaver_health_hooks_are_unhooked(self):
+        cluster = _two_engine_cluster(diffusion=True)
+        a = cluster.engines["a"]
+        cluster.remove_engine("a")
+        sent = cluster.membership.rumors_sent
+        a.health.on_explicit_failure(cluster.topology.rdma_nic(0, 0).link_id)
+        assert cluster.membership.rumors_sent == sent  # no gossip from ghosts
+
+
+# ---------------------------------------------------------------------------
+# The ISSUE acceptance claims for the lossy/churning control plane
+# ---------------------------------------------------------------------------
+
+
+class TestLossyChurnScenarios:
+    def test_lossy_gossip_flap_heals_within_50ms(self):
+        """20% loss + 5 ms delivery delay on every control message: the wire
+        failure must still heal cluster-wide inside the 50 ms budget, with
+        anti-entropy visibly doing repair work."""
+        rep = ScenarioRunner(get("lossy_gossip_flap")).run()
+        assert rep.ok, rep.violations
+        r = rep.policies["tent+diffusion"]
+        assert 0 <= r.stall_ms < 50.0
+        assert r.extra["gossip_dropped"] > 0  # the loss model really fired
+        assert r.extra["rumors_applied"] > 0
+        assert r.extra["anti_entropy_repairs"] > 0  # reconciliation worked
+        assert r.throughput > 1.1 * rep.policies["tent"].throughput
+
+    def test_engine_churn_diffusion_on_beats_off(self):
+        """One engine leaves and one joins mid-run; the control plane keeps
+        paying for itself >= 1.10x against the siloed baseline."""
+        rep = ScenarioRunner(get("engine_churn_diffusion")).run()
+        assert rep.ok, rep.violations
+        on = rep.policies["tent+diffusion"]
+        assert on.throughput >= 1.10 * rep.policies["tent"].throughput
+        assert on.extra["engines_joined"] == 1 and on.extra["engines_left"] == 1
+        assert on.lost_slices == 0
+
+    def test_churn_run_audits_clean_on_every_engine_including_departed(self):
+        spec = get("engine_churn_diffusion")
+        cluster = ScenarioRunner(spec).build_cluster("tent+diffusion")
+        churn = tuple(f for f in spec.faults if f.is_churn)
+        _, ignore = run_cluster_workload(cluster, spec.workload, churn)
+        assert "prefill2" in cluster.departed and "prefill5" in cluster.engines
+        audit = cluster.audit(ignore=ignore)
+        for name, a in audit.items():
+            assert a["slices_outstanding"] == 0, name
+            assert a["batches_failed"] == 0, name
+        assert audit["prefill2"]["batches_done"] > 0  # leaver's work counted
+        assert audit["prefill5"]["batches_done"] > 0  # joiner really produced
+
+    def test_partial_view_incast_still_pays_for_diffusion(self):
+        rep = ScenarioRunner(get("partial_view_incast")).run()
+        assert rep.ok, rep.violations
+        on = rep.policies["tent+diffusion"]
+        assert on.throughput >= 1.10 * rep.policies["tent"].throughput
+
+    def test_churn_events_round_trip_and_validate(self):
+        from repro.scenarios import FaultEvent, ScenarioSpec
+
+        spec = get("engine_churn_diffusion")
+        assert ScenarioSpec.from_dict(spec.to_dict()) == spec
+        with pytest.raises(ValueError, match="engine name"):
+            FaultEvent("leave", 0, 0, at=0.01)
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent("evaporate", 0, 0, at=0.01, until=0.02)
+        assert engine_join("x", 1, at=0.5).is_churn
+        assert not FaultEvent("fail", 0, 0, at=0.1, until=0.2).is_churn
+
+    def test_single_engine_workload_rejects_churn_events(self):
+        single = dataclasses.replace(
+            get("single_rail_flap"),
+            faults=(engine_leave("prefill0", at=0.01),))
+        with pytest.raises(ValueError, match="cluster workload"):
+            ScenarioRunner(single).build_engine("tent")
