@@ -1,0 +1,298 @@
+# Wall-clock hot-path microbench: slices scheduled/sec, wave vs pre-refactor.
+"""Spray hot-path microbenchmark.
+
+Measures how fast the engine can *schedule* slices — decompose an elephant,
+resolve candidates, run Algorithm 1, charge queues, post to the fabric —
+under a single-engine incast burst, and end-to-end under the cluster
+kv_incast scenario. Three engine modes are compared:
+
+  * ``wave``    — the current hot path: cached per-stage candidate sets +
+                  vectorized wave chooser + batched fabric posts;
+  * ``scalar``  — wave dispatch off, candidate cache on: the engine's own
+                  scalar fallback path (what retries/substitutions use);
+  * ``prewave`` — a verbatim re-implementation of the pre-refactor hot path
+                  (per-slice candidate rebuild, scalar choose, O(paths)
+                  linear path scan, per-slice completion closure), kept here
+                  as the bench comparator so the speedup claim stays
+                  reproducible against this exact code.
+
+All three modes make bit-identical scheduling decisions (the wave-parity
+regression in tests/test_wave_parity.py pins this), so the comparison is
+pure overhead, not policy drift.
+
+    python -m benchmarks.spray_hotpath                  # full run
+    python -m benchmarks.spray_hotpath --quick          # CI smoke
+    python -m benchmarks.spray_hotpath --out BENCH_hotpath.json
+
+The --out document uses the same ``tent-scenario-reports/v1`` schema as
+``benchmarks.run --scenario --out`` (scheduling rate in the ``throughput``
+slot), so ``benchmarks.diff old new --fail-on-regression PCT`` tracks the
+hot-path trajectory with no extra tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+from repro.core import EngineConfig, FabricSpec, TentEngine
+from repro.core.engine import _InflightSlice
+from repro.core.scheduler import Candidate
+from repro.core.types import BatchState, Location, MemoryKind, SliceState
+
+SCHEMA = "tent-scenario-reports/v1"
+SPEEDUP_FLOOR = 3.0  # acceptance: wave >= 3x the pre-refactor hot path
+
+
+class PreWaveEngine(TentEngine):
+    """The pre-refactor hot path, verbatim: one slice at a time, candidate
+    objects rebuilt per slice, scalar ranking, linear path scan, per-slice
+    completion closure. Kept only as this benchmark's comparator."""
+
+    def _dispatch(self) -> None:
+        while self._pending and self._inflight < self.config.max_inflight:
+            sl, tcb = self._pending.popleft()
+            if self._batches[tcb.batch_id].state != BatchState.SUBMITTED:
+                continue
+            self._issue(sl, tcb, retry_exclude=())
+
+    def _candidates(self, tcb, hop):
+        stage = tcb.plan.current.stages[hop]
+        be = self.backends[stage.backend]
+        paths = be.paths(stage.src, stage.dst)
+        cands = [
+            Candidate(
+                self.store.ensure(p.local), p.tier,
+                remote=self.store.ensure(p.remote) if p.remote is not None else None,
+            )
+            for p in paths
+        ]
+        return cands, paths
+
+    def _issue(self, sl, tcb, *, retry_exclude=()):
+        from repro.core.types import EXHAUSTED_RETRIES, TentError
+
+        try:
+            cands, paths = self._candidates(tcb, sl.hop)
+            if retry_exclude or sl.attempts > 0:
+                chosen = self.health.choose_retry(cands, retry_exclude)
+                if chosen is None:
+                    raise TentError("NoRetryCandidate", "all rails excluded")
+                chosen.telemetry.on_schedule(sl.length)
+            else:
+                chosen = self.policy.choose(cands, sl.length)
+        except TentError:
+            if tcb.plan.substitute():
+                self.backend_substitutions += 1
+                sl.hop = 0
+                self._issue(sl, tcb, retry_exclude=())
+                return
+            self._fail_batch(tcb, EXHAUSTED_RETRIES)
+            return
+        sl.route_idx = tcb.plan.route_idx
+        path = next(p for p in paths if p.local.link_id == chosen.link_id)
+        tl = chosen.telemetry
+        queued_at_schedule = int(tl.queued_bytes)
+        t_pred = tl.beta0 + tl.beta1 * queued_at_schedule / tl.desc.bandwidth
+        inf = _InflightSlice(sl, tcb, path, t_pred, queued_at_schedule, self.fabric.now)
+        sl.state = SliceState.INFLIGHT
+        sl.scheduled_link = path.local.link_id
+        self._inflight += 1
+        self.slices_issued += 1
+        if path.remote is not None:
+            self.store.charge_remote(path.remote.link_id, sl.length)
+        extra = path.extra_latency + self.config.submission_overhead / max(self.config.post_batch, 1)
+        self.fabric.post(
+            path.local.link_id,
+            path.remote.link_id if path.remote is not None else None,
+            sl.length,
+            lambda ok, t0, t1, err, i=inf: self._on_wire_complete(i, ok, t1, err),
+            extra_latency=extra,
+            bw_scale=path.bw_factor,
+            tenant=self.name,
+        )
+
+
+MODES = ("wave", "scalar", "prewave")
+
+
+def _build_engine(mode: str, spec: FabricSpec, cfg: EngineConfig) -> TentEngine:
+    if mode == "wave":
+        return TentEngine(spec, config=cfg, seed=1)
+    if mode == "scalar":
+        return TentEngine(
+            spec, config=dataclasses.replace(cfg, wave=False), seed=1)
+    cfg = dataclasses.replace(cfg, wave=False, candidate_cache=False)
+    return PreWaveEngine(spec, config=cfg, seed=1)
+
+
+def bench_single_incast(mode: str, *, streams: int, block: int, reps: int) -> dict:
+    """Incast burst: `streams` elephants from two sender nodes converge on
+    one receiver node; the worker ring is opened wide so every elephant's
+    slices are scheduled in one dispatch. The timed section is the issue
+    path (decompose -> candidates -> Algorithm 1 -> fabric post); the drain
+    (fabric service + completions) runs untimed between bursts and is
+    reported separately as the end-to-end rate."""
+    best_sched, best_e2e = 0.0, 0.0
+    slices = 0
+    for _ in range(reps):
+        cfg = EngineConfig(
+            slice_bytes=64 * 1024, max_slices=512, max_inflight=1 << 20)
+        eng = _build_engine(mode, FabricSpec(n_nodes=3, nic_bw=1e9), cfg)
+        segs = []
+        for i in range(streams):
+            src = eng.register_segment(
+                Location(node=i % 2, kind=MemoryKind.HOST_DRAM, numa=i % 2),
+                block, materialize=False)
+            dst = eng.register_segment(
+                Location(node=2, kind=MemoryKind.HOST_DRAM, numa=i % 2),
+                block, materialize=False)
+            segs.append((src, dst))
+        t0 = time.perf_counter()
+        batches = []
+        for src, dst in segs:
+            b = eng.allocate_batch()
+            eng.submit_transfer(b, [(src.segment_id, 0, dst.segment_id, 0, block)])
+            batches.append(b)
+        t_issue = time.perf_counter() - t0
+        for b in batches:
+            res = eng.wait(b)
+            assert res.ok
+        t_total = time.perf_counter() - t0
+        slices = eng.slices_issued
+        best_sched = max(best_sched, slices / t_issue)
+        best_e2e = max(best_e2e, slices / t_total)
+    return {"slices": slices, "sched_rate": best_sched, "e2e_rate": best_e2e}
+
+
+def bench_cluster_kv_incast(mode: str) -> dict:
+    """End-to-end cluster kv_incast: the library's multi_engine_kv_incast
+    scenario (three prefill engines + decode pool + cache contender, global
+    diffusion on) with the hot-path knobs toggled through EngineParams.
+    `prewave` cannot be injected into TentCluster, so it reports the scalar
+    no-cache configuration — the closest in-cluster stand-in."""
+    from repro.scenarios import ScenarioRunner, get
+
+    spec = get("multi_engine_kv_incast")
+    if mode == "wave":
+        engine = spec.engine
+    elif mode == "scalar":
+        engine = dataclasses.replace(spec.engine, wave=False)
+    else:
+        engine = dataclasses.replace(spec.engine, wave=False, candidate_cache=False)
+    spec = dataclasses.replace(spec, engine=engine)
+    t0 = time.perf_counter()
+    report = ScenarioRunner(spec).run_policy("tent+diffusion")
+    wall = time.perf_counter() - t0
+    slices = int(report.extra["slices_issued"])
+    return {"slices": slices, "sched_rate": slices / wall, "e2e_rate": slices / wall}
+
+
+def _policy_report(rate: float, extra: dict) -> dict:
+    """Minimal PolicyReport-shaped dict (the keys benchmarks.diff consumes)
+    with the scheduling rate in the throughput slot."""
+    return {
+        "policy": extra["mode"],
+        "ok": True,
+        "throughput": rate,
+        "recovery_ms": -1.0,
+        "stall_ms": -1.0,
+        "extra": extra,
+    }
+
+
+def run(quick: bool = False) -> list:
+    streams = 8 if quick else 16
+    reps = 2 if quick else 3
+    docs = []
+
+    rows = {}
+    for mode in MODES:
+        rows[mode] = bench_single_incast(
+            mode, streams=streams, block=32 << 20, reps=reps)
+    speedup = rows["wave"]["sched_rate"] / rows["prewave"]["sched_rate"]
+    violations = []
+    if speedup < SPEEDUP_FLOOR:
+        violations.append(
+            f"wave schedules {speedup:.2f}x the pre-refactor rate "
+            f"(< {SPEEDUP_FLOOR:.1f}x floor)")
+    docs.append({
+        "scenario": "hotpath_single_incast",
+        "ok": not violations,
+        "violations": violations,
+        "policies": {
+            mode: _policy_report(
+                r["sched_rate"],
+                {"mode": mode, "slices": r["slices"],
+                 "e2e_rate": r["e2e_rate"],
+                 "speedup_vs_prewave": r["sched_rate"] / rows["prewave"]["sched_rate"]})
+            for mode, r in rows.items()
+        },
+        "spec": {"policies": list(MODES), "streams": streams,
+                 "block": 32 << 20, "reps": reps},
+    })
+
+    cluster_modes = MODES if not quick else ("wave", "prewave")
+    crows = {mode: bench_cluster_kv_incast(mode) for mode in cluster_modes}
+    docs.append({
+        "scenario": "hotpath_cluster_kv_incast",
+        "ok": True,
+        "violations": [],
+        "policies": {
+            mode: _policy_report(
+                r["sched_rate"], {"mode": mode, "slices": r["slices"]})
+            for mode, r in crows.items()
+        },
+        "spec": {"policies": list(cluster_modes)},
+    })
+    return docs
+
+
+def render(docs: list) -> None:
+    for doc in docs:
+        print(f"\n{doc['scenario']}")
+        print(f"  {'mode':9s} {'slices':>8s} {'sched rate':>14s} {'e2e rate':>14s}")
+        for mode, rep in doc["policies"].items():
+            ex = rep["extra"]
+            e2e = ex.get("e2e_rate", rep["throughput"])
+            print(f"  {mode:9s} {ex['slices']:8d} "
+                  f"{rep['throughput']:>11,.0f}/s {e2e:>11,.0f}/s")
+        for mode, rep in doc["policies"].items():
+            if "speedup_vs_prewave" in rep["extra"] and mode == "wave":
+                print(f"  wave vs pre-refactor: "
+                      f"{rep['extra']['speedup_vs_prewave']:.2f}x "
+                      f"(floor {SPEEDUP_FLOOR:.1f}x)")
+        for v in doc["violations"]:
+            print(f"  VIOLATION: {v}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller burst + fewer reps (CI smoke)")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write the rates as a tent-scenario-reports/v1 "
+                         "document (default: BENCH_hotpath.json; compare "
+                         "runs with benchmarks.diff)")
+    args = ap.parse_args(argv)
+    docs = run(quick=args.quick)
+    render(docs)
+    out = args.out or "BENCH_hotpath.json"
+    with open(out, "w") as f:
+        json.dump({
+            "schema": SCHEMA,
+            "generated_unix": round(time.time(), 3),
+            "scenarios": len(docs),
+            "violated": sum(not d["ok"] for d in docs),
+            "reports": docs,
+        }, f, indent=2)
+        f.write("\n")
+    print(f"\nwrote {out}", file=sys.stderr)
+    if any(not d["ok"] for d in docs):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -305,6 +305,8 @@ class TentCluster:
             "exclusions": sum(e.health.exclusions for e in engines),
             "readmissions": sum(e.health.readmissions for e in engines),
             "substitutions": sum(e.backend_substitutions for e in engines),
+            "slices_issued": sum(e.slices_issued for e in engines),
+            "waves": sum(e.waves for e in engines),
             "diffusion_rounds": self.diffusion.rounds if self.diffusion else 0,
             "rumors_sent": self.membership.rumors_sent if self.membership else 0,
             "rumors_applied": self.membership.rumors_applied if self.membership else 0,

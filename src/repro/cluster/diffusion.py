@@ -15,6 +15,12 @@ round stale by construction — a round first ships the previous round's
 snapshots, then captures fresh ones — and with a zero-loss/zero-delay
 channel and full views this reduces exactly to PR 2's table.
 
+Both ends of the exchange lean on the array-backed telemetry store: the
+per-round `snapshot()` capture is one vectorized scan of the queue array
+(not a per-link Python loop), and the `apply_global` delivery installs the
+aggregated view as the sparse dict the omega blend reads once per wave —
+see `repro.core.telemetry` for the array/dict split rationale.
+
 The timer rides the shared fabric's virtual clock and disarms itself when no
 engine has open work, so idle clusters quiesce and `run_until_idle` halts.
 Engines can join (`attach`) and leave (`forget`) mid-run: a departed

@@ -3,7 +3,14 @@ primary contribution), plus the discrete-event fabric it executes on in this
 reproduction."""
 from .engine import BatchResult, EngineConfig, TentEngine
 from .fabric import Fabric
-from .plan import Orchestrator, RouteOption, Stage, TransportPlan
+from .plan import (
+    Orchestrator,
+    RouteOption,
+    Stage,
+    StageCandidates,
+    TransportPlan,
+    build_stage_candidates,
+)
 from .resilience import HealthConfig, HealthMonitor
 from .scheduler import (
     Candidate,
@@ -15,6 +22,8 @@ from .scheduler import (
     TentPolicy,
     make_policy,
     tent_choose_jnp,
+    tent_choose_wave,
+    tent_choose_wave_jnp,
     tent_scores_jnp,
 )
 from .segments import Segment, SegmentManager, device_segment, file_segment, host_segment
@@ -34,9 +43,11 @@ from .types import (
 
 __all__ = [
     "BatchResult", "EngineConfig", "TentEngine", "Fabric", "Orchestrator",
-    "RouteOption", "Stage", "TransportPlan", "HealthConfig", "HealthMonitor",
+    "RouteOption", "Stage", "StageCandidates", "TransportPlan",
+    "build_stage_candidates", "HealthConfig", "HealthMonitor",
     "Candidate", "HashPolicy", "PinnedPolicy", "Policy", "RoundRobinPolicy",
     "StaticBest2Policy", "TentPolicy", "make_policy", "tent_choose_jnp",
+    "tent_choose_wave", "tent_choose_wave_jnp",
     "tent_scores_jnp", "Segment", "SegmentManager", "device_segment",
     "file_segment", "host_segment", "decompose", "LinkTelemetry",
     "TelemetryStore", "DEFAULT_TIER_PENALTY", "FabricSpec", "LinkDesc",

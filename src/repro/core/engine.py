@@ -16,9 +16,9 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .fabric import Fabric
-from .plan import Orchestrator, TransportPlan
+from .plan import Orchestrator, Stage, StageCandidates, TransportPlan, build_stage_candidates
 from .resilience import HealthConfig, HealthMonitor
-from .scheduler import Candidate, Policy, TentPolicy, make_policy
+from .scheduler import Policy, TentPolicy, make_policy
 from .segments import Segment, SegmentManager
 from .slicing import DEFAULT_MAX_SLICES, DEFAULT_SLICE_BYTES, decompose
 from .telemetry import TelemetryStore
@@ -37,6 +37,14 @@ from .types import (
 )
 
 
+# Runs shorter than this go through the scalar chooser: the vectorized wave
+# kernel and the scalar path pick bit-identical rails, so the cutover is a
+# pure cost decision — below it, array gather/scatter setup costs more than
+# it saves (the steady-state closed loop re-dispatches one slice per
+# completion, which must stay on the cheap path).
+WAVE_MIN = 4
+
+
 @dataclasses.dataclass
 class EngineConfig:
     policy: str = "tent"
@@ -52,6 +60,15 @@ class EngineConfig:
     submission_overhead: float = 1.5e-6
     post_batch: int = 16
     global_diffusion_weight: float = 0.0  # omega, off by default
+    # hot-path controls. `wave` schedules pending slices a batch at a time
+    # through the vectorized chooser (`TentPolicy.choose_wave`), falling back
+    # to the scalar path only for retries/substitutions; `candidate_cache`
+    # reuses the per-plan-stage candidate sets instead of re-enumerating wire
+    # paths per slice. Both default on; turning both off reproduces the
+    # pre-wave one-slice-at-a-time hot path (the `benchmarks/spray_hotpath`
+    # comparator) with bit-identical scheduling decisions.
+    wave: bool = True
+    candidate_cache: bool = True
 
 
 @dataclasses.dataclass
@@ -60,6 +77,11 @@ class _TransferCB:
     plan: TransportPlan
     remaining: int
     batch_id: int
+    # (route_idx, hop) -> StageCandidates: per-transfer memo over the
+    # engine-wide stage cache, so the wave grouping pays one cheap int-tuple
+    # lookup per slice instead of hashing Stage locations
+    stages: Dict[Tuple[int, int], StageCandidates] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -96,7 +118,7 @@ class BatchResult:
         return self.bytes / max(self.elapsed, 1e-12)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _InflightSlice:
     sl: Slice
     tcb: _TransferCB
@@ -139,11 +161,23 @@ class TentEngine:
         self._open_work = 0  # batches submitted but not completed
         self._reset_timer_armed = False
         self._probe_timer_armed = False
+        # hot-path state: the engine-wide per-stage candidate cache, the
+        # amortized per-post submission latency, and whether the policy has
+        # a vectorized wave chooser (only TentPolicy does; the baseline
+        # ablations run the scalar loop over the same cached candidates)
+        self._stage_cache: Dict[Stage, StageCandidates] = {}
+        self._post_overhead = (
+            self.config.submission_overhead / max(self.config.post_batch, 1))
+        self._tier_penalty = (
+            self.policy.tier_penalty if isinstance(self.policy, TentPolicy) else None)
+        self._wave_policy = self.config.wave and isinstance(self.policy, TentPolicy)
         # observability
         self.slice_latencies: List[float] = []
         self.transfer_records: List[BatchResult] = []
         self.slices_retried = 0
         self.backend_substitutions = 0
+        self.slices_issued = 0
+        self.waves = 0
         # pre-register telemetry for every link so resets/benchmarks see all
         for link in topology.links:
             self.store.ensure(link)
@@ -250,30 +284,180 @@ class TentEngine:
 
     # ------------------------------------------------------------- dispatch
     def _dispatch(self) -> None:
-        while self._pending and self._inflight < self.config.max_inflight:
-            sl, tcb = self._pending.popleft()
-            if self._batches[tcb.batch_id].state != BatchState.SUBMITTED:
-                continue  # batch already failed; drop
-            self._issue(sl, tcb, retry_exclude=())
+        """Drain the pending ring into the fabric, a wave at a time.
 
-    def _candidates(self, tcb: _TransferCB, hop: int) -> Tuple[List[Candidate], List[WirePath]]:
+        Pops up to the worker-ring headroom worth of slices, groups
+        consecutive runs that share a plan-stage candidate set, and issues
+        each run in one batch: the TENT policy scores the whole run through
+        the vectorized wave chooser (sequential line-11 queue charges
+        preserved), baseline policies loop the scalar chooser over the same
+        cached candidates, and the chosen paths are posted through one
+        batched fabric call. Retries, staged-hop continuations, and backend
+        substitutions keep using the scalar `_issue` path."""
+        if not self.config.wave:
+            while self._pending and self._inflight < self.config.max_inflight:
+                sl, tcb = self._pending.popleft()
+                if self._batches[tcb.batch_id].state != BatchState.SUBMITTED:
+                    continue  # batch already failed; drop
+                self._issue(sl, tcb, retry_exclude=())
+            return
+        while self._pending and self._inflight < self.config.max_inflight:
+            budget = self.config.max_inflight - self._inflight
+            wave: List[Tuple[Slice, _TransferCB]] = []
+            while self._pending and len(wave) < budget:
+                sl, tcb = self._pending.popleft()
+                if self._batches[tcb.batch_id].state != BatchState.SUBMITTED:
+                    continue  # batch already failed; drop
+                wave.append((sl, tcb))
+            if not wave:
+                return
+            self._issue_wave(wave)
+
+    def _stage_cands(self, tcb: _TransferCB, hop: int) -> StageCandidates:
+        """The candidate set for a transfer's current (route, hop) stage,
+        resolved through the per-transfer memo and the engine-wide stage
+        cache (stages are static given the topology, so one build serves
+        every slice that ever crosses the stage)."""
+        key = (tcb.plan.route_idx, hop)
+        sc = tcb.stages.get(key)
+        if sc is not None:
+            return sc
         stage = tcb.plan.current.stages[hop]
-        be = self.backends[stage.backend]
-        paths = be.paths(stage.src, stage.dst)
-        cands = [
-            Candidate(
-                self.store.ensure(p.local), p.tier,
-                remote=self.store.ensure(p.remote) if p.remote is not None else None,
+        sc = self._stage_cache.get(stage) if self.config.candidate_cache else None
+        if sc is None:
+            sc = build_stage_candidates(
+                stage, self.backends, self.store,
+                tier_penalty=self._tier_penalty,
+                post_overhead=self._post_overhead,
             )
-            for p in paths
-        ]
-        return cands, paths
+            if self.config.candidate_cache:
+                self._stage_cache[stage] = sc
+        tcb.stages[key] = sc
+        return sc
+
+    def _issue_wave(self, wave: List[Tuple[Slice, _TransferCB]]) -> None:
+        """Issue one popped wave: group by stage, choose in batch, post in
+        batch. When a slice has no usable candidates (empty backend or
+        tier-infeasible set) the slices after it are pushed back onto the
+        pending ring and the problem slice takes the scalar substitution
+        path — exactly the order the one-slice loop produced."""
+        i, n = 0, len(wave)
+        # set once a scalar _issue ran inside this wave: only then can a
+        # batch have failed between pop time and a later run's posting
+        dirty = False
+        while i < n:
+            sl, tcb = wave[i]
+            sc = self._stage_cands(tcb, sl.hop)
+            if not sc.paths:
+                self._requeue_front(wave[i + 1:])
+                self._issue(sl, tcb, retry_exclude=())
+                return
+            j = i + 1
+            hop = sl.hop
+            while j < n:
+                sl2, tcb2 = wave[j]
+                # same transfer, same hop -> same stage by construction; only
+                # cross-transfer neighbours need the memo lookup
+                if not (tcb2 is tcb and sl2.hop == hop) and \
+                        self._stage_cands(tcb2, sl2.hop) is not sc:
+                    break
+                j += 1
+            run = wave[i:j]
+            if dirty:
+                # a scalar issue earlier in this wave may have failed a
+                # batch via exhausted substitution; drop its slices exactly
+                # like the one-slice loop's pop-time check would
+                run = [e for e in run
+                       if self._batches[e[1].batch_id].state == BatchState.SUBMITTED]
+                if not run:
+                    i = j
+                    continue
+            if self._wave_policy and len(run) >= WAVE_MIN:
+                lengths = np.fromiter(
+                    (s.length for s, _ in run), dtype=np.int64, count=len(run))
+                choices, queued_at = self.policy.choose_wave(sc, lengths)
+                if choices[-1] < 0:
+                    # first infeasible slice ends the kernel's run: post what
+                    # was scheduled, hand the bad slice to the scalar
+                    # substitution path, push the rest back in order
+                    k = int(np.argmax(choices < 0))
+                    self._post_run(run[:k], sc, choices, queued_at)
+                    self._requeue_front(list(run[k + 1:]) + list(wave[j:]))
+                    bad_sl, bad_tcb = run[k]
+                    self._issue(bad_sl, bad_tcb, retry_exclude=())
+                    return
+                self._post_run(run, sc, choices, queued_at)
+            else:
+                dirty = True
+                for sl2, tcb2 in run:
+                    # a substitution failure earlier in this run may have
+                    # failed the batch; drop its remaining slices like the
+                    # one-slice loop's pop-time check did
+                    if self._batches[tcb2.batch_id].state != BatchState.SUBMITTED:
+                        continue
+                    self._issue(sl2, tcb2, retry_exclude=())
+            i = j
+
+    def _requeue_front(self, items: Sequence[Tuple[Slice, _TransferCB]]) -> None:
+        if items:
+            self._pending.extendleft(reversed(items))
+
+    def _post_run(
+        self,
+        run: Sequence[Tuple[Slice, _TransferCB]],
+        sc: StageCandidates,
+        choices,
+        queued_at,
+    ) -> None:
+        """Build the inflight records for one scheduled run and enqueue the
+        whole run through the fabric's batched post (one shared completion
+        callback; no per-slice closures)."""
+        if not len(run):
+            return
+        store = self.store
+        beta0, beta1 = store.beta0_arr, store.beta1_arr
+        charge_remote = store.charge_remote
+        paths, slots, extras = sc.paths, sc.local_slot, sc.extra_latency
+        now = self.fabric.now
+        inflight_state = SliceState.INFLIGHT
+        specs = []
+        append = specs.append
+        for k, (sl, tcb) in enumerate(run):
+            ci = choices[k]
+            path = paths[ci]
+            slot = slots[ci]
+            q_after = int(queued_at[k])  # A_d at schedule time (incl. this slice)
+            t_pred = beta0[slot] + beta1[slot] * q_after / path.local.bandwidth
+            inf = _InflightSlice(sl, tcb, path, t_pred, q_after, now)
+            # per-slice, not per-run: transfers at different route_idx can
+            # share one stage by value, and the substitution-follow logic
+            # compares sl.route_idx against the slice's OWN plan
+            sl.route_idx = tcb.plan.route_idx
+            sl.state = inflight_state
+            local_link = path.local.link_id
+            sl.scheduled_link = local_link
+            remote = path.remote
+            if remote is not None:
+                # receiver-side accounting: published to the cluster's global
+                # load table so peer engines see the incast forming (§4.2)
+                charge_remote(remote.link_id, sl.length)
+                append((local_link, remote.link_id, sl.length,
+                        extras[ci], path.bw_factor, inf))
+            else:
+                append((local_link, None, sl.length,
+                        extras[ci], path.bw_factor, inf))
+        self._inflight += len(specs)
+        self.slices_issued += len(specs)
+        self.waves += 1
+        self.fabric.post_many(specs, self._on_wire_done, tenant=self.name)
 
     def _issue(self, sl: Slice, tcb: _TransferCB, *, retry_exclude: Sequence[int]) -> None:
         """Schedule one slice hop via the policy (or the reliability-first
-        retry chooser) and post it to the fabric."""
+        retry chooser) and post it to the fabric — the scalar path, kept for
+        retries, staged-hop continuations, and backend substitutions."""
         try:
-            cands, paths = self._candidates(tcb, sl.hop)
+            sc = self._stage_cands(tcb, sl.hop)
+            cands = sc.cands
             if retry_exclude or sl.attempts > 0:
                 chosen = self.health.choose_retry(cands, retry_exclude)
                 if chosen is None:
@@ -292,9 +476,9 @@ class TentEngine:
             return
 
         sl.route_idx = tcb.plan.route_idx
-        path = next(p for p in paths if p.local.link_id == chosen.link_id)
+        path = sc.path_by_link[chosen.link_id]
         tl = chosen.telemetry
-        queued_at_schedule = tl.queued_bytes  # includes this slice (line 11)
+        queued_at_schedule = int(tl.queued_bytes)  # includes this slice (line 11)
         t_pred = tl.beta0 + tl.beta1 * queued_at_schedule / tl.desc.bandwidth
         inf = _InflightSlice(
             sl=sl, tcb=tcb, path=path, t_pred=t_pred,
@@ -303,20 +487,28 @@ class TentEngine:
         sl.state = SliceState.INFLIGHT
         sl.scheduled_link = path.local.link_id
         self._inflight += 1
+        self.slices_issued += 1
         if path.remote is not None:
             # receiver-side accounting: published to the cluster's global
             # load table so peer engines see the incast forming (§4.2)
             self.store.charge_remote(path.remote.link_id, sl.length)
-        extra = path.extra_latency + self.config.submission_overhead / max(self.config.post_batch, 1)
         self.fabric.post(
             path.local.link_id,
             path.remote.link_id if path.remote is not None else None,
             sl.length,
-            lambda ok, t0, t1, err, i=inf: self._on_wire_complete(i, ok, t1, err),
-            extra_latency=extra,
+            self._on_wire_done,
+            extra_latency=path.extra_latency + self._post_overhead,
             bw_scale=path.bw_factor,
             tenant=self.name,
+            tag=inf,
         )
+
+    def _on_wire_done(self, tag: "_InflightSlice", ok: bool, t0: float,
+                      t1: float, err: str) -> None:
+        """Shared tagged completion for every posted slice (wave or scalar):
+        the fabric hands the `_InflightSlice` back, so posting needs no
+        per-slice closure."""
+        self._on_wire_complete(tag, ok, t1, err)
 
     # ----------------------------------------------------------- completion
     def _on_wire_complete(self, inf: _InflightSlice, ok: bool, t_end: float, err: str) -> None:

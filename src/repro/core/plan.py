@@ -9,10 +9,13 @@ and substitute whole backends without application involvement.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
+from .scheduler import Candidate
 from .segments import Segment
-from .transports import TransportBackend
+from .transports import TransportBackend, WirePath
 from .types import Location, MemoryKind, TentError, UNREACHABLE
 
 
@@ -59,6 +62,91 @@ class TransportPlan:
             self.route_idx += 1
             return True
         return False
+
+
+@dataclasses.dataclass
+class StageCandidates:
+    """The cached, array-annotated candidate set for one plan stage.
+
+    A `Stage` is a pure (backend, src, dst) value, so its wire paths — and
+    therefore its schedulable candidate set — are a static function of the
+    topology. The engine builds this once per distinct stage and reuses it
+    for every slice, instead of re-enumerating paths and re-allocating
+    `Candidate` objects per slice as the pre-wave hot path did. Alongside
+    the object lists (still consumed by the scalar policies and the retry
+    chooser) it carries:
+
+      * `path_by_link` — the link-id → WirePath index (O(1) lookup where
+        `TentEngine._issue` used to linearly scan the path list);
+      * per-candidate numpy arrays (store slots, bandwidth, tier penalty,
+        remoteness masks) — everything `TentPolicy.choose_wave` needs to
+        gather a wave's telemetry straight out of the store's
+        struct-of-arrays state;
+      * `extra_latency` — the per-path submission latency with the engine's
+        amortized posting overhead folded in, precomputed so the wave post
+        loop does no arithmetic per slice.
+    """
+
+    stage: Stage
+    paths: List[WirePath]
+    cands: List[Candidate]
+    path_by_link: Dict[int, WirePath]
+    local_slot: np.ndarray  # store slots of the local (schedulable) links
+    remote_slot_safe: np.ndarray  # remote store slots, 0 where pathless
+    has_remote: np.ndarray  # bool mask: which candidates pair a remote NIC
+    remote_any: bool
+    local_links: Tuple[int, ...]
+    remote_links: Tuple[Optional[int], ...]
+    bandwidth: np.ndarray
+    penalty: Optional[np.ndarray]  # tier penalties (None for non-TENT policies)
+    extra_latency: Tuple[float, ...]
+    zeros: np.ndarray
+
+
+def build_stage_candidates(
+    stage: Stage,
+    backends: Dict[str, TransportBackend],
+    store,
+    *,
+    tier_penalty: Optional[Dict[int, float]] = None,
+    post_overhead: float = 0.0,
+) -> StageCandidates:
+    """Materialize one stage's candidate set with its scheduling arrays."""
+    be = backends[stage.backend]
+    paths = be.paths(stage.src, stage.dst)
+    cands = [
+        Candidate(
+            store.ensure(p.local), p.tier,
+            remote=store.ensure(p.remote) if p.remote is not None else None,
+        )
+        for p in paths
+    ]
+    n = len(paths)
+    remote_slots = np.fromiter(
+        (c.remote.slot if c.remote is not None else -1 for c in cands),
+        dtype=np.int64, count=n)
+    inf = float("inf")
+    return StageCandidates(
+        stage=stage,
+        paths=paths,
+        cands=cands,
+        path_by_link={p.local.link_id: p for p in paths},
+        local_slot=np.fromiter((c.telemetry.slot for c in cands),
+                               dtype=np.int64, count=n),
+        remote_slot_safe=np.maximum(remote_slots, 0),
+        has_remote=remote_slots >= 0,
+        remote_any=bool((remote_slots >= 0).any()),
+        local_links=tuple(p.local.link_id for p in paths),
+        remote_links=tuple(
+            p.remote.link_id if p.remote is not None else None for p in paths),
+        bandwidth=np.fromiter((p.local.bandwidth for p in paths),
+                              dtype=np.float64, count=n),
+        penalty=(np.fromiter((tier_penalty.get(p.tier, inf) for p in paths),
+                             dtype=np.float64, count=n)
+                 if tier_penalty is not None else None),
+        extra_latency=tuple(p.extra_latency + post_overhead for p in paths),
+        zeros=np.zeros(n, dtype=np.float64),
+    )
 
 
 def _staging_host(loc: Location) -> Location:

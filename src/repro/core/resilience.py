@@ -133,7 +133,9 @@ class HealthMonitor:
         return self.readmit(link_id)
 
     def excluded_links(self) -> List[int]:
-        return [lid for lid, tl in self.store.items() if tl.excluded]
+        # one vectorized scan of the store's exclusion array (the monitor's
+        # writes land there directly through the LinkTelemetry views)
+        return self.store.excluded_link_ids()
 
     # -- retry path selection (reliability over latency) ----------------------
     def choose_retry(

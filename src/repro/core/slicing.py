@@ -40,22 +40,15 @@ def decompose(
     n = min(max(1, length // slice_bytes), max_slices)
     base = length // n
     rem = length % n
+    transfer_id, src_segment, dst_segment = req.transfer_id, req.src_segment, req.dst_segment
+    src_base, dst_base = req.src_offset, req.dst_offset
     slices: List[Slice] = []
+    append = slices.append
     off = 0
     for i in range(n):
         ln = base + (1 if i < rem else 0)
-        slices.append(
-            Slice(
-                slice_id=next_slice_id(),
-                transfer_id=req.transfer_id,
-                batch_id=batch_id,
-                src_segment=req.src_segment,
-                src_offset=req.src_offset + off,
-                dst_segment=req.dst_segment,
-                dst_offset=req.dst_offset + off,
-                length=ln,
-            )
-        )
+        append(Slice(next_slice_id(), transfer_id, batch_id,
+                     src_segment, src_base + off, dst_segment, dst_base + off, ln))
         off += ln
     assert off == length
     return slices

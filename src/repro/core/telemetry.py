@@ -8,44 +8,124 @@ coefficients beta are dynamic correction factors absorbing incast, switch
 congestion and silent degradation, updated by an EWMA filter from the
 prediction error on every slice completion. A periodic state reset prevents
 starvation of temporarily slow rails (paper §4.2 "Feedback").
+
+Storage layout: the store is struct-of-arrays. Every per-link quantity
+(beta0/beta1/queued/excluded/health counters) lives in one contiguous numpy
+array, indexed by a stable slot assigned at registration time (the
+link-index map). `LinkTelemetry` is a thin *view* — an object carrying
+(store, slot, desc) whose attributes read and write the arrays — so the
+whole pre-existing per-link API keeps working, `HealthMonitor` exclusions
+land directly in the arrays, and the wave scheduler
+(`TentPolicy.choose_wave` / `tent_choose_wave`) can gather a candidate
+set's entire state with a handful of fancy-indexing operations instead of
+touching N Python objects per slice.
+
+The cross-engine structures (`global_load`, `remote_queued`, `_published`)
+deliberately stay dicts: they are written by *other* components (the
+cluster's diffusion service replaces `global_load` wholesale each round;
+shared-table mode aliases one dict across several stores), they are sparse,
+and they are read once per wave, not once per slice — see the core README
+for the vectorized/scalar split rationale.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from .topology import LinkDesc
 
 DEFAULT_BETA0 = 0.0
 DEFAULT_BETA1 = 1.0
+DEFAULT_EWMA_ALPHA = 0.25
+DEFAULT_BETA0_ALPHA = 0.05
 
 
-@dataclasses.dataclass
+def _field(name: str, arr: str):
+    """Property reading/writing one SoA array slot (the view mechanics)."""
+
+    def get(self):
+        return getattr(self.store, arr)[self.slot]
+
+    def set(self, value):
+        getattr(self.store, arr)[self.slot] = value
+
+    get.__name__ = set.__name__ = name
+    return property(get, set)
+
+
 class LinkTelemetry:
-    desc: LinkDesc
-    beta0: float = DEFAULT_BETA0
-    beta0_prior: float = DEFAULT_BETA0  # topology-informed fixed-cost prior
-    beta1: float = DEFAULT_BETA1
-    queued_bytes: int = 0  # A_d
-    ewma_alpha: float = 0.25
-    beta0_alpha: float = 0.05
-    # health signals
-    consecutive_slow: int = 0
-    excluded: bool = False
-    # observability
-    completions: int = 0
-    failures: int = 0
-    ewma_service_time: float = 0.0
+    """View over one link's slot in a `TelemetryStore`'s arrays.
+
+    Constructing one directly (without `_store`) allocates a private
+    single-slot store, so standalone uses (unit tests, ad-hoc scoring) keep
+    the old value-object ergonomics; `TelemetryStore.ensure` hands out views
+    into the shared arrays."""
+
+    __slots__ = ("desc", "store", "slot")
+
+    def __init__(
+        self,
+        desc: LinkDesc,
+        beta0: float = DEFAULT_BETA0,
+        beta0_prior: float = DEFAULT_BETA0,
+        beta1: float = DEFAULT_BETA1,
+        queued_bytes: int = 0,
+        ewma_alpha: float = DEFAULT_EWMA_ALPHA,
+        beta0_alpha: float = DEFAULT_BETA0_ALPHA,
+        consecutive_slow: int = 0,
+        excluded: bool = False,
+        completions: int = 0,
+        failures: int = 0,
+        ewma_service_time: float = 0.0,
+        *,
+        _store: Optional["TelemetryStore"] = None,
+    ):
+        self.desc = desc
+        self.store = _store if _store is not None else TelemetryStore()
+        self.slot = self.store._alloc(
+            self, desc,
+            beta0=beta0, beta0_prior=beta0_prior, beta1=beta1,
+            queued_bytes=queued_bytes, ewma_alpha=ewma_alpha,
+            beta0_alpha=beta0_alpha, consecutive_slow=consecutive_slow,
+            excluded=excluded, completions=completions, failures=failures,
+            ewma_service_time=ewma_service_time,
+        )
+
+    beta0 = _field("beta0", "beta0_arr")
+    beta0_prior = _field("beta0_prior", "beta0_prior_arr")
+    beta1 = _field("beta1", "beta1_arr")
+    queued_bytes = _field("queued_bytes", "queued_arr")
+    ewma_alpha = _field("ewma_alpha", "ewma_alpha_arr")
+    beta0_alpha = _field("beta0_alpha", "beta0_alpha_arr")
+    consecutive_slow = _field("consecutive_slow", "slow_arr")
+    completions = _field("completions", "completions_arr")
+    failures = _field("failures", "failures_arr")
+    ewma_service_time = _field("ewma_service_time", "ewma_service_arr")
+
+    @property
+    def excluded(self) -> bool:
+        return bool(self.store.excluded_arr[self.slot])
+
+    @excluded.setter
+    def excluded(self, value: bool) -> None:
+        self.store.excluded_arr[self.slot] = bool(value)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging convenience
+        return (f"LinkTelemetry({self.desc.name}, beta0={float(self.beta0):.3g}, "
+                f"beta1={float(self.beta1):.3g}, queued={int(self.queued_bytes)}, "
+                f"excluded={self.excluded})")
 
     def predict(self, length: int) -> float:
         """Estimated completion time for a new slice of `length` bytes."""
         return self.beta0 + self.beta1 * (self.queued_bytes + length) / self.desc.bandwidth
 
     def on_schedule(self, length: int) -> None:
-        self.queued_bytes += length
+        self.store.queued_arr[self.slot] += length
 
     def on_cancel(self, length: int) -> None:
-        self.queued_bytes = max(0, self.queued_bytes - length)
+        s = self.store
+        s.queued_arr[self.slot] = max(0, s.queued_arr[self.slot] - length)
 
     def on_complete(self, length: int, queued_at_schedule: int, t_obs: float) -> None:
         """EWMA update from the observed slice completion time.
@@ -54,32 +134,35 @@ class LinkTelemetry:
         beta1, so the per-sample estimate of beta1 is (t_obs - beta0)/x.
         beta0 absorbs the residual fixed cost with a slower filter.
         """
-        self.queued_bytes = max(0, self.queued_bytes - length)
-        self.completions += 1
+        s, i = self.store, self.slot
+        s.queued_arr[i] = max(0, s.queued_arr[i] - length)
+        s.completions_arr[i] += 1
+        alpha = s.ewma_alpha_arr[i]
         x = (queued_at_schedule + length) / self.desc.bandwidth
         if x > 0:
-            sample = (t_obs - self.beta0) / x
+            sample = (t_obs - s.beta0_arr[i]) / x
             sample = min(max(sample, 0.05), 1e4)
-            self.beta1 = (1 - self.ewma_alpha) * self.beta1 + self.ewma_alpha * sample
-        resid = max(0.0, t_obs - self.beta1 * x)
-        self.beta0 = (1 - self.beta0_alpha) * self.beta0 + self.beta0_alpha * resid
-        a = self.ewma_alpha
-        self.ewma_service_time = (1 - a) * self.ewma_service_time + a * t_obs
+            s.beta1_arr[i] = (1 - alpha) * s.beta1_arr[i] + alpha * sample
+        resid = max(0.0, t_obs - s.beta1_arr[i] * x)
+        b0a = s.beta0_alpha_arr[i]
+        s.beta0_arr[i] = (1 - b0a) * s.beta0_arr[i] + b0a * resid
+        s.ewma_service_arr[i] = (1 - alpha) * s.ewma_service_arr[i] + alpha * t_obs
 
     def on_failure(self) -> None:
-        self.failures += 1
+        self.store.failures_arr[self.slot] += 1
 
     def reset(self) -> None:
         """Periodic state reset (paper §4.2): forget learned penalties so that
         recovered paths are re-integrated into the pool."""
-        self.beta0 = self.beta0_prior
-        self.beta1 = DEFAULT_BETA1
-        self.consecutive_slow = 0
+        s, i = self.store, self.slot
+        s.beta0_arr[i] = s.beta0_prior_arr[i]
+        s.beta1_arr[i] = DEFAULT_BETA1
+        s.slow_arr[i] = 0
 
 
 class TelemetryStore:
-    """All per-link telemetry for one engine instance, plus the optional
-    cross-process global load diffusion table (paper §4.2).
+    """All per-link telemetry for one engine instance as struct-of-arrays,
+    plus the optional cross-process global load diffusion table (paper §4.2).
 
     The global table maps link_id -> queued bytes *other* engines have in
     flight on that link (populated by `repro.cluster.GlobalLoadTable` or by
@@ -89,8 +172,21 @@ class TelemetryStore:
     charged against remote endpoints, so peers can see the receiver-side
     pressure through the diffusion table."""
 
+    _FLOAT_ARRS = ("beta0_arr", "beta0_prior_arr", "beta1_arr",
+                   "ewma_alpha_arr", "beta0_alpha_arr", "ewma_service_arr")
+    _INT_ARRS = ("queued_arr", "slow_arr", "completions_arr", "failures_arr")
+
     def __init__(self) -> None:
-        self._links: Dict[int, LinkTelemetry] = {}
+        self.n = 0
+        self._cap = 0
+        for name in self._FLOAT_ARRS:
+            setattr(self, name, np.empty(0, dtype=np.float64))
+        for name in self._INT_ARRS:
+            setattr(self, name, np.empty(0, dtype=np.int64))
+        self.excluded_arr = np.empty(0, dtype=bool)
+        self._slots: Dict[int, int] = {}  # link_id -> slot (stable index map)
+        self._link_ids: List[int] = []  # slot -> link_id
+        self._views: List[LinkTelemetry] = []  # slot -> view
         # Shared-memory analogue: link_id -> queued bytes from OTHER engines
         self.global_load: Dict[int, int] = {}
         self.global_weight: float = 0.0  # omega_d, disabled by default
@@ -101,20 +197,58 @@ class TelemetryStore:
         # double-counts its own load through the table.
         self._published: Dict[int, int] = {}
 
+    # -- slot allocation -----------------------------------------------------
+    def _grow(self, need: int) -> None:
+        cap = max(16, 2 * self._cap, need)
+        for name in self._FLOAT_ARRS + self._INT_ARRS + ("excluded_arr",):
+            old = getattr(self, name)
+            new = np.zeros(cap, dtype=old.dtype)
+            new[: self.n] = old[: self.n]
+            setattr(self, name, new)
+        self._cap = cap
+
+    def _alloc(self, view: LinkTelemetry, desc: LinkDesc, **init) -> int:
+        if self.n >= self._cap:
+            self._grow(self.n + 1)
+        slot = self.n
+        self.n += 1
+        self.beta0_arr[slot] = init["beta0"]
+        self.beta0_prior_arr[slot] = init["beta0_prior"]
+        self.beta1_arr[slot] = init["beta1"]
+        self.queued_arr[slot] = init["queued_bytes"]
+        self.ewma_alpha_arr[slot] = init["ewma_alpha"]
+        self.beta0_alpha_arr[slot] = init["beta0_alpha"]
+        self.slow_arr[slot] = init["consecutive_slow"]
+        self.completions_arr[slot] = init["completions"]
+        self.failures_arr[slot] = init["failures"]
+        self.ewma_service_arr[slot] = init["ewma_service_time"]
+        self.excluded_arr[slot] = init["excluded"]
+        self._slots[desc.link_id] = slot
+        self._link_ids.append(desc.link_id)
+        self._views.append(view)
+        return slot
+
+    # -- registration / lookup ----------------------------------------------
     def ensure(self, desc: LinkDesc) -> LinkTelemetry:
-        tl = self._links.get(desc.link_id)
-        if tl is None:
+        slot = self._slots.get(desc.link_id)
+        if slot is None:
             # Topology discovery seeds the fixed-cost term with the link's
             # known base latency so cold-start predictions aren't absurd.
-            tl = LinkTelemetry(desc=desc, beta0=desc.base_latency, beta0_prior=desc.base_latency)
-            self._links[desc.link_id] = tl
-        return tl
+            return LinkTelemetry(
+                desc=desc, beta0=desc.base_latency,
+                beta0_prior=desc.base_latency, _store=self)
+        return self._views[slot]
 
     def get(self, link_id: int) -> LinkTelemetry:
-        return self._links[link_id]
+        return self._views[self._slots[link_id]]
 
     def maybe(self, link_id: int):
-        return self._links.get(link_id)
+        slot = self._slots.get(link_id)
+        return None if slot is None else self._views[slot]
+
+    def slot_of(self, link_id: int) -> int:
+        """Stable array index of a registered link (the link-index map)."""
+        return self._slots[link_id]
 
     def effective_queue(self, tl: LinkTelemetry) -> float:
         """Local queue plus the omega-discounted global load factor. The
@@ -170,8 +304,12 @@ class TelemetryStore:
     def snapshot(self) -> Dict[int, int]:
         """This engine's total in-flight footprint per link (local queues
         plus remote-endpoint charges) — what it publishes to the cluster's
-        global load table each diffusion round."""
-        out = {lid: tl.queued_bytes for lid, tl in self._links.items() if tl.queued_bytes}
+        global load table each diffusion round. One vectorized scan over the
+        queue array instead of a per-link Python loop."""
+        link_ids = self._link_ids
+        queued = self.queued_arr
+        out = {link_ids[i]: int(queued[i])
+               for i in np.flatnonzero(queued[: self.n])}
         for lid, q in self.remote_queued.items():
             if q:
                 out[lid] = out.get(lid, 0) + q
@@ -179,19 +317,29 @@ class TelemetryStore:
 
     def publish_global(self) -> None:
         """Shared-table mode: several stores point at one `global_load` dict
-        and each writes its own queue depths in. Publishing *replaces* this
+        and each writes their own queue depths in. Publishing *replaces* this
         store's previous contribution (no unbounded accumulation), and reads
         subtract it via `_published`."""
-        for lid, tl in self._links.items():
+        for lid, slot in self._slots.items():
             prev = self._published.get(lid, 0)
-            if tl.queued_bytes or prev:
-                self.global_load[lid] = (
-                    self.global_load.get(lid, 0) - prev + tl.queued_bytes)
-                self._published[lid] = tl.queued_bytes
+            q = int(self.queued_arr[slot])
+            if q or prev:
+                self.global_load[lid] = self.global_load.get(lid, 0) - prev + q
+                self._published[lid] = q
 
+    # -- bulk state ----------------------------------------------------------
     def reset_all(self) -> None:
-        for tl in self._links.values():
-            tl.reset()
+        n = self.n
+        self.beta0_arr[:n] = self.beta0_prior_arr[:n]
+        self.beta1_arr[:n] = DEFAULT_BETA1
+        self.slow_arr[:n] = 0
+
+    def excluded_link_ids(self) -> List[int]:
+        """Link ids of all currently soft-excluded rails — one vectorized
+        scan of the exclusion array (the prober polls this every round)."""
+        link_ids = self._link_ids
+        return [link_ids[i] for i in np.flatnonzero(self.excluded_arr[: self.n])]
 
     def items(self):
-        return self._links.items()
+        # a re-iterable sequence, like the dict view this used to return
+        return list(zip(self._link_ids, self._views))

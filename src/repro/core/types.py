@@ -91,7 +91,7 @@ class SliceState(enum.Enum):
     FAILED = "failed"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Slice:
     """Unit of scheduling/isolation. Writes to an *absolute* destination
     offset so re-execution is idempotent (paper §4.3)."""

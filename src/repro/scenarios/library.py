@@ -293,6 +293,32 @@ _register(ScenarioSpec(
 ))
 
 _register(ScenarioSpec(
+    "churn_storm",
+    "Membership churn in bursts, not single events: two prefill engines "
+    "deregister back-to-back mid-incast, two cold engines join moments "
+    "later, one of the joiners leaves again, and a decode-side NIC flaps "
+    "while the roster is still settling. Every departure must be garbage-"
+    "collected without ghost pressure, every joiner must bootstrap from "
+    "gossip alone, no slice may be lost on any engine (including the ones "
+    "that left with slices in flight), and the wire failure must still "
+    "heal inside the 50 ms virtual budget through all of it.",
+    topology=TopologyParams(n_nodes=8, nic_bw=1.0e9),
+    workload=dataclasses.replace(_INCAST, duration=0.05),
+    faults=(
+        engine_leave("prefill1", at=0.010),
+        engine_leave("prefill2", at=0.012),
+        engine_join("prefill5", 5, at=0.014),
+        engine_join("prefill6", 6, at=0.016),
+        FaultEvent("fail", 3, 1, at=0.020, until=0.035),
+        engine_leave("prefill5", at=0.025),
+        engine_join("prefill7", 7, at=0.030),
+    ),
+    policies=("tent+diffusion", "tent", "round_robin"),
+    expectations=Expectations(tent_vs_baseline=1.0, max_stall_ms=50.0),
+    bucket=0.004,
+))
+
+_register(ScenarioSpec(
     "trainer_broadcast_fanout",
     "A trainer engine fans checkpoint shards out to three serving engines "
     "that are churning KV among themselves, while a cache-tier engine's "

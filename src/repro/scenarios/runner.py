@@ -213,6 +213,8 @@ class ScenarioRunner:
                 "anti_entropy_repairs": float(counters.pop("anti_entropy_repairs")),
                 "engines_joined": float(counters.pop("engines_joined")),
                 "engines_left": float(counters.pop("engines_left")),
+                "slices_issued": float(counters.pop("slices_issued")),
+                "waves": float(counters.pop("waves")),
             }
             return self._reduce(
                 policy, fabric=cluster.fabric, audit=audit,
@@ -228,7 +230,11 @@ class ScenarioRunner:
                 "readmissions": engine.health.readmissions,
                 "substitutions": engine.backend_substitutions,
             },
-            outcome=outcome)
+            outcome=outcome,
+            extra={
+                "slices_issued": float(engine.slices_issued),
+                "waves": float(engine.waves),
+            })
 
     def run(self) -> ScenarioReport:
         reports = {p: self.run_policy(p) for p in self.spec.policies}

@@ -350,7 +350,13 @@ class BackgroundSpec:
 @dataclasses.dataclass(frozen=True)
 class EngineParams:
     """The `EngineConfig`/`HealthConfig` knobs a scenario pins down. The
-    policy itself comes from the spec's ablation list."""
+    policy itself comes from the spec's ablation list.
+
+    `wave`/`candidate_cache` expose the engine's hot-path controls: both on
+    (the default) runs the vectorized wave scheduler over cached per-stage
+    candidate sets; both off reproduces the pre-wave one-slice-at-a-time
+    loop with bit-identical scheduling decisions (the wave-parity regression
+    and `benchmarks/spray_hotpath.py` rely on that toggle)."""
 
     slice_bytes: int = 64 * 1024
     max_slices: int = 64
@@ -359,6 +365,8 @@ class EngineParams:
     reset_interval: float = 1.0
     probe_interval: float = 0.02
     retry_limit: int = 8
+    wave: bool = True
+    candidate_cache: bool = True
 
     def to_engine_config(self, policy: str) -> EngineConfig:
         return EngineConfig(
@@ -368,6 +376,8 @@ class EngineParams:
             max_inflight=self.max_inflight,
             gamma=self.gamma,
             reset_interval=self.reset_interval,
+            wave=self.wave,
+            candidate_cache=self.candidate_cache,
             health=HealthConfig(
                 probe_interval=self.probe_interval, retry_limit=self.retry_limit
             ),

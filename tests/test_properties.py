@@ -15,10 +15,14 @@ from repro.core import (
     TransferRequest,
     decompose,
     tent_choose_jnp,
+    tent_choose_wave,
+    tent_choose_wave_jnp,
 )
-from repro.core.telemetry import LinkTelemetry
+from repro.core.telemetry import LinkTelemetry, TelemetryStore
 from repro.core.topology import LinkDesc
 from repro.core.types import LinkClass
+
+TIER_PENALTY = {1: 1.0, 2: 3.0}
 
 
 def _mk_tl(link_id, bw=25e9, queued=0, beta0=0.0, beta1=1.0, excluded=False):
@@ -115,6 +119,161 @@ class TestSchedulerInvariants:
         # the jnp choice must land inside the python tolerance window
         s_min = min(s_py)
         assert s_py[int(idx)] <= 1.05 * s_min * (1 + 1e-6)
+
+
+def _wave_state(draw_queues, tiers, excluded, beta0s, beta1s, global_load, weight):
+    """Build one TelemetryStore + candidate list from hypothesis data. Every
+    candidate gets a paired remote link (ids offset by 100) so the remote
+    pressure/remote exclusion paths are exercised."""
+    n = min(len(draw_queues), len(tiers), len(excluded), len(beta0s), len(beta1s))
+    store = TelemetryStore()
+    cands = []
+    for i in range(n):
+        desc = LinkDesc(link_id=i, node=0, link_class=LinkClass.RDMA,
+                        index=i, numa=0, bandwidth=25e9, base_latency=5e-6)
+        rdesc = LinkDesc(link_id=100 + i, node=1, link_class=LinkClass.RDMA,
+                         index=i, numa=0, bandwidth=25e9, base_latency=5e-6)
+        tl = store.ensure(desc)
+        rtl = store.ensure(rdesc)
+        tl.queued_bytes = draw_queues[i]
+        tl.beta0 = beta0s[i]
+        tl.beta1 = beta1s[i]
+        tl.excluded = excluded[i]
+        # remote exclusions (failure rumors from peers) knock paths out too
+        rtl.excluded = excluded[(i + 1) % len(excluded)] and excluded[i - 1]
+        cands.append(Candidate(tl, tiers[i], remote=rtl))
+    store.global_weight = weight
+    store.global_load = {
+        lid % (100 + n): q for lid, q in global_load.items()}
+    return store, cands
+
+
+class TestWaveParity:
+    """The scalar chooser and the vectorized wave kernels must pick the
+    same rail — bit-identical scores, window membership, round-robin tie
+    breaks, and sequential line-11 charges — across randomized telemetry
+    states including exclusions and omega-blended global load."""
+
+    @given(
+        queues=st.lists(st.integers(0, 1 << 30), min_size=2, max_size=8),
+        tiers=st.lists(st.sampled_from([1, 2]), min_size=8, max_size=8),
+        excluded=st.lists(st.booleans(), min_size=8, max_size=8),
+        beta0s=st.lists(st.floats(0.0, 1e-2), min_size=8, max_size=8),
+        beta1s=st.lists(st.floats(0.05, 50.0), min_size=8, max_size=8),
+        global_load=st.dictionaries(st.integers(0, 120), st.integers(0, 1 << 28),
+                                    max_size=6),
+        weight=st.sampled_from([0.0, 0.5, 0.6]),
+        lengths=st.lists(st.integers(1, 1 << 22), min_size=1, max_size=24),
+        rr0=st.integers(0, 50),
+        gamma=st.sampled_from([0.0, 0.05, 0.3]),
+    )
+    @settings(max_examples=120, deadline=None)
+    def test_numpy_wave_kernel_replays_scalar_choose(
+            self, queues, tiers, excluded, beta0s, beta1s, global_load,
+            weight, lengths, rr0, gamma):
+        args = (queues, tiers, excluded, beta0s, beta1s, global_load, weight)
+        store_a, cands_a = _wave_state(*args)
+        store_b, cands_b = _wave_state(*args)
+        n = len(cands_a)
+
+        # scalar replay: one choose() per slice, charging as it goes
+        policy = TentPolicy(gamma=gamma, store=store_a,
+                            tier_penalty=dict(TIER_PENALTY))
+        policy._rr = rr0
+        scalar_choices = [
+            cands_a.index(policy.choose(cands_a, L)) for L in lengths]
+
+        # vectorized replay over the identical twin state
+        choices, queued_at, queued_out, rr_out = tent_choose_wave(
+            np.asarray([c.telemetry.queued_bytes for c in cands_b]),
+            np.asarray([weight * store_b._foreign_load(c.telemetry.desc.link_id)
+                        if weight > 0 else 0.0 for c in cands_b]),
+            np.asarray([weight * store_b._foreign_load(c.remote.desc.link_id)
+                        if weight > 0 else 0.0 for c in cands_b]),
+            np.asarray([c.telemetry.desc.bandwidth for c in cands_b]),
+            np.asarray([float(c.telemetry.beta0) for c in cands_b]),
+            np.asarray([float(c.telemetry.beta1) for c in cands_b]),
+            np.asarray([TIER_PENALTY[c.tier] for c in cands_b]),
+            np.asarray([bool(c.telemetry.excluded) or bool(c.remote.excluded)
+                        for c in cands_b]),
+            np.asarray(lengths), rr0, gamma)
+
+        assert list(choices) == scalar_choices
+        assert rr_out == policy._rr
+        for i in range(n):  # line-11 charges identical after the wave
+            assert queued_out[i] == cands_a[i].telemetry.queued_bytes
+        # queued_at_schedule (the EWMA anchor) matches the scalar reads
+        replay = [int(q) for q in
+                  np.asarray([c.telemetry.queued_bytes for c in cands_b])]
+        for k, (c, L) in enumerate(zip(choices, lengths)):
+            replay[c] += L
+            assert queued_at[k] == replay[c]
+
+    @given(
+        queues=st.lists(st.integers(0, 1 << 28), min_size=2, max_size=8),
+        tiers=st.lists(st.sampled_from([1, 2]), min_size=8, max_size=8),
+        excluded=st.lists(st.booleans(), min_size=8, max_size=8),
+        length=st.integers(1, 1 << 22),
+        rr=st.integers(0, 100),
+        gamma=st.sampled_from([0.0, 0.05, 0.3]),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_jnp_choose_matches_scalar_incl_exclusions_and_ties(
+            self, queues, tiers, excluded, length, rr, gamma):
+        """tent_choose_jnp under x64 must land on the exact rail the scalar
+        policy picks — including soft-excluded rails, the all-excluded
+        fallback, and round-robin selection inside the gamma window."""
+        from jax.experimental import enable_x64
+
+        n = min(len(queues), len(tiers))
+        cands = [Candidate(_mk_tl(i, queued=queues[i], excluded=excluded[i]),
+                           tiers[i]) for i in range(n)]
+        policy = TentPolicy(gamma=gamma, tier_penalty=dict(TIER_PENALTY))
+        policy._rr = rr
+        chosen = policy.choose(cands, length)
+        scalar_idx = cands.index(chosen)
+        with enable_x64():
+            idx = tent_choose_jnp(
+                np.asarray(queues[:n], dtype=np.float64),
+                np.full(n, 25e9), np.zeros(n), np.ones(n),
+                np.asarray([TIER_PENALTY[t] for t in tiers[:n]]),
+                float(length), rr, gamma,
+                excluded=np.asarray(excluded[:n]))
+        assert int(idx) == scalar_idx
+
+    @given(
+        queues=st.lists(st.integers(0, 1 << 28), min_size=2, max_size=8),
+        excluded=st.lists(st.booleans(), min_size=8, max_size=8),
+        lengths=st.lists(st.integers(1, 1 << 22), min_size=1, max_size=12),
+        rr0=st.integers(0, 50),
+        gamma=st.sampled_from([0.0, 0.05]),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_jnp_wave_kernel_matches_numpy_kernel(
+            self, queues, excluded, lengths, rr0, gamma):
+        from jax.experimental import enable_x64
+
+        n = len(queues)
+        bw = np.full(n, 25e9)
+        b0, b1 = np.zeros(n), np.ones(n)
+        pen = np.ones(n)
+        ex = np.asarray(excluded[:n])
+        zeros = np.zeros(n)
+        np_c, np_qas, np_q, np_rr = tent_choose_wave(
+            np.asarray(queues), zeros, zeros, bw, b0, b1, pen, ex,
+            np.asarray(lengths), rr0, gamma)
+        with enable_x64():
+            j_c, j_qas, j_q, j_rr = tent_choose_wave_jnp(
+                np.asarray(queues, dtype=np.float64), zeros, zeros, bw,
+                b0, b1, pen, ex, np.asarray(lengths), rr0, gamma)
+            # materialize inside the x64 scope (x64 arrays cannot be
+            # unstacked once the flag reverts)
+            j_c, j_qas, j_q = np.asarray(j_c), np.asarray(j_qas), np.asarray(j_q)
+            j_rr = int(j_rr)
+        assert list(np_c) == [int(v) for v in j_c]
+        assert list(np_qas) == [int(v) for v in j_qas]
+        assert list(np_q) == [int(v) for v in j_q]
+        assert j_rr == np_rr
 
 
 class TestEwmaBounded:
