@@ -20,14 +20,22 @@ All three modes make bit-identical scheduling decisions (the wave-parity
 regression in tests/test_wave_parity.py pins this), so the comparison is
 pure overhead, not policy drift.
 
+The ``hotpath_completion_drain`` section measures the *other* half of the
+closed loop: completions drained per second under an incast burst on a
+jitter-free fabric (identical service times across the receiver rails, so
+completions land in same-timestamp groups — exactly the regime the batched
+drain exploits), ``wave_complete`` on vs off. Both drains produce
+bit-identical outcomes (tests/test_complete_parity.py), so this too is pure
+overhead.
+
     python -m benchmarks.spray_hotpath                  # full run
     python -m benchmarks.spray_hotpath --quick          # CI smoke
     python -m benchmarks.spray_hotpath --out BENCH_hotpath.json
 
 The --out document uses the same ``tent-scenario-reports/v1`` schema as
-``benchmarks.run --scenario --out`` (scheduling rate in the ``throughput``
-slot), so ``benchmarks.diff old new --fail-on-regression PCT`` tracks the
-hot-path trajectory with no extra tooling.
+``benchmarks.run --scenario --out`` (scheduling/drain rate in the
+``throughput`` slot), so ``benchmarks.diff old new --fail-on-regression
+PCT`` tracks the hot-path trajectory with no extra tooling.
 """
 from __future__ import annotations
 
@@ -37,13 +45,14 @@ import json
 import sys
 import time
 
-from repro.core import EngineConfig, FabricSpec, TentEngine
+from repro.core import EngineConfig, Fabric, FabricSpec, NodeSpec, TentEngine, Topology
 from repro.core.engine import _InflightSlice
 from repro.core.scheduler import Candidate
 from repro.core.types import BatchState, Location, MemoryKind, SliceState
 
 SCHEMA = "tent-scenario-reports/v1"
 SPEEDUP_FLOOR = 3.0  # acceptance: wave >= 3x the pre-refactor hot path
+DRAIN_SPEEDUP_FLOOR = 2.0  # acceptance: batched drain >= 2x the scalar drain
 
 
 class PreWaveEngine(TentEngine):
@@ -124,7 +133,8 @@ def _build_engine(mode: str, spec: FabricSpec, cfg: EngineConfig) -> TentEngine:
     if mode == "scalar":
         return TentEngine(
             spec, config=dataclasses.replace(cfg, wave=False), seed=1)
-    cfg = dataclasses.replace(cfg, wave=False, candidate_cache=False)
+    cfg = dataclasses.replace(
+        cfg, wave=False, candidate_cache=False, wave_complete=False)
     return PreWaveEngine(spec, config=cfg, seed=1)
 
 
@@ -165,6 +175,80 @@ def bench_single_incast(mode: str, *, streams: int, block: int, reps: int) -> di
         best_sched = max(best_sched, slices / t_issue)
         best_e2e = max(best_e2e, slices / t_total)
     return {"slices": slices, "sched_rate": best_sched, "e2e_rate": best_e2e}
+
+
+DRAIN_MODES = ("batched", "scalar")
+
+
+def bench_completion_drain(mode: str, *, streams: int, block: int, reps: int) -> dict:
+    """Completions drained/sec under an incast burst. `streams` elephants
+    from two sender nodes converge on one fat 128-rail receiver; the fabric
+    runs jitter-free so the parallel receiver chains stay in lockstep and
+    completions land in same-timestamp groups of ~128 — the regime the
+    batched drain is built for. Every slice is issued up-front (untimed)
+    with the worker ring wide open; the timed section is the pure drain —
+    event pops, per-op fabric accounting, telemetry EWMA feedback, health
+    observation, slice finish — `wave_complete` on (batched: one sink call
+    + `on_complete_many` per group) vs off (the per-completion scalar
+    drain). Decisions and outcomes are bit-identical across the toggle
+    (tests/test_complete_parity.py), so the ratio is pure drain overhead."""
+    best_rate = 0.0
+    drained = batches = 0
+    for _ in range(reps):
+        rate, drained, batches = _drain_once(mode, streams, block)
+        best_rate = max(best_rate, rate)
+    return {"slices": drained, "drain_rate": best_rate,
+            "completion_batches": batches}
+
+
+def _drain_once(mode: str, streams: int, block: int):
+    """One measured drain: returns (completions/sec, drained, batches)."""
+    cfg = EngineConfig(
+        slice_bytes=64 * 1024, max_slices=1024, max_inflight=1 << 20,
+        wave_complete=(mode == "batched"))
+    topo = Topology(FabricSpec(
+        n_nodes=3, nic_bw=1e9,
+        node=NodeSpec(n_numa=1, n_gpus=0, n_nics=128)))
+    eng = TentEngine(
+        topology=topo, fabric=Fabric(topo, seed=1, jitter=0.0),
+        config=cfg, seed=1)
+    batches_ids = []
+    for i in range(streams):
+        src = eng.register_segment(
+            Location(node=i % 2, kind=MemoryKind.HOST_DRAM, numa=0),
+            block, materialize=False)
+        dst = eng.register_segment(
+            Location(node=2, kind=MemoryKind.HOST_DRAM, numa=0),
+            block, materialize=False)
+        b = eng.allocate_batch()
+        eng.submit_transfer(b, [(src.segment_id, 0, dst.segment_id, 0, block)])
+        batches_ids.append(b)
+    t0 = time.perf_counter()
+    eng.run_until_idle()
+    t_drain = time.perf_counter() - t0
+    for b in batches_ids:
+        state, remaining = eng.get_transfer_status(b)
+        assert state == BatchState.DONE and remaining == 0
+    return eng.completions_drained / t_drain, eng.completions_drained, \
+        eng.completion_batches
+
+
+def bench_completion_drain_pair(*, streams: int, block: int, reps: int) -> dict:
+    """Both drain arms measured with *interleaved* repetitions
+    (batched, scalar, batched, scalar, ...): a background load spike on the
+    host then deflates both arms rather than whichever arm happened to be
+    running, which keeps the reported ratio honest on shared machines. Each
+    arm reports its best repetition."""
+    rows = {}
+    for mode in DRAIN_MODES:
+        rows[mode] = {"slices": 0, "drain_rate": 0.0, "completion_batches": 0}
+    for _ in range(reps):
+        for mode in DRAIN_MODES:
+            rate, drained, batches = _drain_once(mode, streams, block)
+            r = rows[mode]
+            r["slices"], r["completion_batches"] = drained, batches
+            r["drain_rate"] = max(r["drain_rate"], rate)
+    return rows
 
 
 def bench_cluster_kv_incast(mode: str) -> dict:
@@ -234,6 +318,36 @@ def run(quick: bool = False) -> list:
                  "block": 32 << 20, "reps": reps},
     })
 
+    # the drain bench is cheap (pure event-loop wall clock), so it keeps its
+    # full burst even under --quick: fewer streams shrink the lockstep
+    # chains and under-fill the completion batches the bench exists to weigh
+    drain_streams = 16
+    drain_reps = 3 if quick else 5
+    drows = bench_completion_drain_pair(
+        streams=drain_streams, block=32 << 20, reps=drain_reps)
+    drain_speedup = drows["batched"]["drain_rate"] / drows["scalar"]["drain_rate"]
+    drain_violations = []
+    if drain_speedup < DRAIN_SPEEDUP_FLOOR:
+        drain_violations.append(
+            f"batched drain completes {drain_speedup:.2f}x the scalar drain "
+            f"rate (< {DRAIN_SPEEDUP_FLOOR:.1f}x floor)")
+    docs.append({
+        "scenario": "hotpath_completion_drain",
+        "ok": not drain_violations,
+        "violations": drain_violations,
+        "policies": {
+            mode: _policy_report(
+                r["drain_rate"],
+                {"mode": mode, "slices": r["slices"],
+                 "completion_batches": r["completion_batches"],
+                 "speedup_vs_scalar":
+                     r["drain_rate"] / drows["scalar"]["drain_rate"]})
+            for mode, r in drows.items()
+        },
+        "spec": {"policies": list(DRAIN_MODES), "streams": drain_streams,
+                 "block": 32 << 20, "reps": drain_reps},
+    })
+
     cluster_modes = MODES if not quick else ("wave", "prewave")
     crows = {mode: bench_cluster_kv_incast(mode) for mode in cluster_modes}
     docs.append({
@@ -264,6 +378,11 @@ def render(docs: list) -> None:
                 print(f"  wave vs pre-refactor: "
                       f"{rep['extra']['speedup_vs_prewave']:.2f}x "
                       f"(floor {SPEEDUP_FLOOR:.1f}x)")
+            if "speedup_vs_scalar" in rep["extra"] and mode == "batched":
+                print(f"  batched vs scalar drain: "
+                      f"{rep['extra']['speedup_vs_scalar']:.2f}x "
+                      f"(floor {DRAIN_SPEEDUP_FLOOR:.1f}x, "
+                      f"{rep['extra']['completion_batches']} batches)")
         for v in doc["violations"]:
             print(f"  VIOLATION: {v}", file=sys.stderr)
 

@@ -307,6 +307,8 @@ class TentCluster:
             "substitutions": sum(e.backend_substitutions for e in engines),
             "slices_issued": sum(e.slices_issued for e in engines),
             "waves": sum(e.waves for e in engines),
+            "completions_drained": sum(e.completions_drained for e in engines),
+            "completion_batches": sum(e.completion_batches for e in engines),
             "diffusion_rounds": self.diffusion.rounds if self.diffusion else 0,
             "rumors_sent": self.membership.rumors_sent if self.membership else 0,
             "rumors_applied": self.membership.rumors_applied if self.membership else 0,

@@ -41,8 +41,16 @@ from .types import (
 # kernel and the scalar path pick bit-identical rails, so the cutover is a
 # pure cost decision — below it, array gather/scatter setup costs more than
 # it saves (the steady-state closed loop re-dispatches one slice per
-# completion, which must stay on the cheap path).
+# completion, which must stay on the cheap path). WAVE_MIN is the neutral
+# starting point; unless `EngineConfig.wave_min` pins it, each engine tunes
+# its crossover online within [WAVE_MIN_FLOOR, WAVE_MIN_CEIL] from the run
+# lengths and completion-batch sizes it actually observes (burst-heavy
+# traffic amortizes kernel setup well -> lower crossover; a trickle of
+# single completions cannot -> higher). Because both paths pick identical
+# rails, the tuner can never change a scheduling decision, only its cost.
 WAVE_MIN = 4
+WAVE_MIN_FLOOR = 2
+WAVE_MIN_CEIL = 8
 
 
 @dataclasses.dataclass
@@ -69,6 +77,17 @@ class EngineConfig:
     # comparator) with bit-identical scheduling decisions.
     wave: bool = True
     candidate_cache: bool = True
+    # `wave_complete` batches the *drain* half of the closed loop: the fabric
+    # delivers all completions landing at one virtual timestamp in a single
+    # call, telemetry EWMA updates run vectorized (`on_complete_many`), and
+    # failure fan-out retries flush through one batched post. Off reproduces
+    # the per-completion scalar drain with bit-identical outcomes (pinned in
+    # tests/test_complete_parity.py). `wave_min` pins the scalar/wave
+    # dispatch crossover to a fixed value for determinism experiments; None
+    # (default) lets the engine adapt it online from observed run lengths
+    # and completion-batch sizes.
+    wave_complete: bool = True
+    wave_min: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -82,6 +101,10 @@ class _TransferCB:
     # lookup per slice instead of hashing Stage locations
     stages: Dict[Tuple[int, int], StageCandidates] = dataclasses.field(
         default_factory=dict)
+    # (src_seg, dst_seg, dst_is_phantom) resolved once at submit: every
+    # slice of the transfer finishes against the same segments, so the
+    # drain loop never re-resolves them
+    segs: tuple = ()
 
 
 @dataclasses.dataclass
@@ -126,6 +149,12 @@ class _InflightSlice:
     t_pred: float
     queued_at_schedule: int
     scheduled_at: float
+    slot: int = -1  # local link's telemetry-store slot (batched-drain gather)
+    # pre-packed batched-drain columns, built once at post time so the drain
+    # gathers a whole run with one zip instead of per-item attribute chases:
+    # (slot, length, queued_at_schedule, scheduled_at, t_pred, local_link,
+    #  remote_link or -1)
+    drain: tuple = ()
 
 
 class TentEngine:
@@ -171,6 +200,19 @@ class TentEngine:
         self._tier_penalty = (
             self.policy.tier_penalty if isinstance(self.policy, TentPolicy) else None)
         self._wave_policy = self.config.wave and isinstance(self.policy, TentPolicy)
+        # scalar/wave dispatch crossover: pinned by config, or tuned online
+        # from run-length / completion-batch EWMAs (`_tune_wave_min`)
+        self._adaptive_wave_min = self.config.wave_min is None
+        self._wave_min = (
+            WAVE_MIN if self._adaptive_wave_min else max(1, self.config.wave_min))
+        self._run_ewma = 0.0
+        self._drain_ewma = 0.0
+        # armed only inside the batched failure drain: scalar `_issue` calls
+        # append their post specs here instead of posting, and the drain
+        # flushes them through one `post_many` (stream-identical to the
+        # deferred sequential posts)
+        self._post_buffer: Optional[list] = None
+        self._cb_batches = 0  # live batches with registered done-callbacks
         # observability
         self.slice_latencies: List[float] = []
         self.transfer_records: List[BatchResult] = []
@@ -178,6 +220,11 @@ class TentEngine:
         self.backend_substitutions = 0
         self.slices_issued = 0
         self.waves = 0
+        self.completions_drained = 0
+        self.completion_batches = 0
+        if self.config.wave_complete:
+            self.fabric.register_completion_sink(
+                self._on_wire_done, self._on_wire_done_many)
         # pre-register telemetry for every link so resets/benchmarks see all
         for link in topology.links:
             self.store.ensure(link)
@@ -232,12 +279,20 @@ class TentEngine:
                 src_segment=src, src_offset=soff,
                 dst_segment=dst, dst_offset=doff, length=length,
             )
-            plan = self.orchestrator.resolve(self.segments.get(src), self.segments.get(dst))
+            src_seg, dst_seg = self.segments.get(src), self.segments.get(dst)
+            # validate the whole declared range up front: phantom segments
+            # never materialize bytes, so submit time is where out-of-range
+            # offsets must fail loudly (real segments re-check per slice
+            # inside read/write as before)
+            src_seg._check_range(soff, length)
+            dst_seg._check_range(doff, length)
+            plan = self.orchestrator.resolve(src_seg, dst_seg)
             slices = decompose(
                 req, batch_id,
                 slice_bytes=self.config.slice_bytes, max_slices=self.config.max_slices,
             )
             tcb = _TransferCB(req=req, plan=plan, remaining=len(slices), batch_id=batch_id)
+            tcb.segs = (src_seg, dst_seg, dst_seg.phantom)
             bc.transfers.append(tcb)
             bc.remaining_slices += len(slices)
             for sl in slices:
@@ -247,6 +302,11 @@ class TentEngine:
 
     def on_batch_done(self, batch_id: int, fn: Callable[[BatchResult], None]) -> None:
         bc = self._batches[batch_id]
+        if not bc.callbacks and bc.state in (BatchState.OPEN, BatchState.SUBMITTED):
+            # live batches carrying callbacks force the batched drain to
+            # project batch completions while scanning (the callback cut);
+            # while this is zero the scan takes the bookkeeping-free path
+            self._cb_batches += 1
         bc.callbacks.append(lambda b: fn(self._result(b)))
 
     def get_transfer_status(self, batch_id: int) -> Tuple[BatchState, int]:
@@ -350,7 +410,14 @@ class TentEngine:
             sc = self._stage_cands(tcb, sl.hop)
             if not sc.paths:
                 self._requeue_front(wave[i + 1:])
-                self._issue(sl, tcb, retry_exclude=())
+                # a scalar issue earlier in this wave may have failed this
+                # slice's batch; the one-slice loop would drop it at pop
+                # time, so the candidate-less fallback must not resurrect it
+                # through the substitution path (it could post a dead
+                # batch's slices on the next-best transport)
+                if not dirty or \
+                        self._batches[tcb.batch_id].state == BatchState.SUBMITTED:
+                    self._issue(sl, tcb, retry_exclude=())
                 return
             j = i + 1
             hop = sl.hop
@@ -372,7 +439,10 @@ class TentEngine:
                 if not run:
                     i = j
                     continue
-            if self._wave_policy and len(run) >= WAVE_MIN:
+            if self._adaptive_wave_min:
+                self._run_ewma = 0.75 * self._run_ewma + 0.25 * len(run)
+                self._tune_wave_min()
+            if self._wave_policy and len(run) >= self._wave_min:
                 lengths = np.fromiter(
                     (s.length for s, _ in run), dtype=np.int64, count=len(run))
                 choices, queued_at = self.policy.choose_wave(sc, lengths)
@@ -398,6 +468,31 @@ class TentEngine:
                     self._issue(sl2, tcb2, retry_exclude=())
             i = j
 
+    def _tune_wave_min(self) -> None:
+        """Adapt the scalar/wave crossover online. The wave kernel pays an
+        O(n_cands) array gather/scatter setup once per run while the scalar
+        chooser pays O(n_cands) per slice, so the crossover should sit where
+        typical runs amortize the setup: sustained long dispatch runs or fat
+        completion batches (bursty traffic) push it to the floor, a trickle
+        of single-slice redispatches (steady-state closed loop) pushes it to
+        the ceiling. Deterministic given the virtual clock — the signal is
+        structural (batch sizes), never wall-clock."""
+        signal = self._run_ewma if self._run_ewma > self._drain_ewma \
+            else self._drain_ewma
+        if signal >= 2.0 * WAVE_MIN:
+            self._wave_min = WAVE_MIN_FLOOR
+        elif signal <= 0.5 * WAVE_MIN:
+            self._wave_min = WAVE_MIN_CEIL
+        else:
+            self._wave_min = WAVE_MIN
+
+    @property
+    def wave_min(self) -> int:
+        """The scalar/wave dispatch crossover currently in force (fixed when
+        `EngineConfig.wave_min` pins it, otherwise the tuner's latest
+        estimate)."""
+        return self._wave_min
+
     def _requeue_front(self, items: Sequence[Tuple[Slice, _TransferCB]]) -> None:
         if items:
             self._pending.extendleft(reversed(items))
@@ -418,6 +513,7 @@ class TentEngine:
         beta0, beta1 = store.beta0_arr, store.beta1_arr
         charge_remote = store.charge_remote
         paths, slots, extras = sc.paths, sc.local_slot, sc.extra_latency
+        bws = sc.bandwidth
         now = self.fabric.now
         inflight_state = SliceState.INFLIGHT
         specs = []
@@ -427,8 +523,8 @@ class TentEngine:
             path = paths[ci]
             slot = slots[ci]
             q_after = int(queued_at[k])  # A_d at schedule time (incl. this slice)
-            t_pred = beta0[slot] + beta1[slot] * q_after / path.local.bandwidth
-            inf = _InflightSlice(sl, tcb, path, t_pred, q_after, now)
+            t_pred = beta0[slot] + beta1[slot] * q_after / bws[ci]
+            inf = _InflightSlice(sl, tcb, path, t_pred, q_after, now, slot)
             # per-slice, not per-run: transfers at different route_idx can
             # share one stage by value, and the substitution-follow logic
             # compares sl.route_idx against the slice's OWN plan
@@ -440,10 +536,15 @@ class TentEngine:
             if remote is not None:
                 # receiver-side accounting: published to the cluster's global
                 # load table so peer engines see the incast forming (§4.2)
-                charge_remote(remote.link_id, sl.length)
-                append((local_link, remote.link_id, sl.length,
+                rid = remote.link_id
+                charge_remote(rid, sl.length)
+                inf.drain = (slot, sl.length, q_after, now, t_pred,
+                             local_link, rid)
+                append((local_link, rid, sl.length,
                         extras[ci], path.bw_factor, inf))
             else:
+                inf.drain = (slot, sl.length, q_after, now, t_pred,
+                             local_link, -1)
                 append((local_link, None, sl.length,
                         extras[ci], path.bw_factor, inf))
         self._inflight += len(specs)
@@ -480,21 +581,35 @@ class TentEngine:
         tl = chosen.telemetry
         queued_at_schedule = int(tl.queued_bytes)  # includes this slice (line 11)
         t_pred = tl.beta0 + tl.beta1 * queued_at_schedule / tl.desc.bandwidth
+        now = self.fabric.now
         inf = _InflightSlice(
             sl=sl, tcb=tcb, path=path, t_pred=t_pred,
-            queued_at_schedule=queued_at_schedule, scheduled_at=self.fabric.now,
+            queued_at_schedule=queued_at_schedule, scheduled_at=now,
+            slot=tl.slot,
         )
         sl.state = SliceState.INFLIGHT
         sl.scheduled_link = path.local.link_id
         self._inflight += 1
         self.slices_issued += 1
-        if path.remote is not None:
+        remote_link = path.remote.link_id if path.remote is not None else None
+        inf.drain = (tl.slot, sl.length, queued_at_schedule, now, t_pred,
+                     path.local.link_id,
+                     remote_link if remote_link is not None else -1)
+        if remote_link is not None:
             # receiver-side accounting: published to the cluster's global
             # load table so peer engines see the incast forming (§4.2)
-            self.store.charge_remote(path.remote.link_id, sl.length)
+            self.store.charge_remote(remote_link, sl.length)
+        buf = self._post_buffer
+        if buf is not None:
+            # batched failure drain: defer the post into the drain's single
+            # post_many flush (stream- and event-identical to posting here)
+            buf.append((path.local.link_id, remote_link, sl.length,
+                        path.extra_latency + self._post_overhead,
+                        path.bw_factor, inf))
+            return
         self.fabric.post(
             path.local.link_id,
-            path.remote.link_id if path.remote is not None else None,
+            remote_link,
             sl.length,
             self._on_wire_done,
             extra_latency=path.extra_latency + self._post_overhead,
@@ -508,59 +623,240 @@ class TentEngine:
         """Shared tagged completion for every posted slice (wave or scalar):
         the fabric hands the `_InflightSlice` back, so posting needs no
         per-slice closure."""
+        self.completions_drained += 1
         self._on_wire_complete(tag, ok, t1, err)
 
     # ----------------------------------------------------------- completion
     def _on_wire_complete(self, inf: _InflightSlice, ok: bool, t_end: float, err: str) -> None:
+        """Scalar completion drain: one slice's full feedback sequence
+        (telemetry EWMA / health / continuation or retry) plus a ring
+        redispatch. The batched drain decomposes into exactly these handlers
+        and must stay in lockstep with them."""
         self._inflight -= 1
-        sl, tcb, tl = inf.sl, inf.tcb, self.store.get(inf.path.local.link_id)
         if inf.path.remote is not None:
-            self.store.discharge_remote(inf.path.remote.link_id, sl.length)
+            self.store.discharge_remote(inf.path.remote.link_id, inf.sl.length)
         if ok:
-            t_obs = t_end - inf.scheduled_at
-            tl.on_complete(sl.length, inf.queued_at_schedule, t_obs)
-            self.health.observe(tl.desc.link_id, t_obs, inf.t_pred)
-            if tl.excluded:
-                self._arm_probe_timer()  # implicit exclusion -> start probing
-            route = tcb.plan.current
-            if sl.hop + 1 < len(route.stages):
-                sl.hop += 1
-                self._issue(sl, tcb, retry_exclude=())  # pipelined staged hop
-            else:
-                self._finish_slice(sl, tcb, t_end)
+            self._handle_wire_success(inf, t_end)
         else:
-            tl.on_cancel(sl.length)
-            self.health.on_path_failure(
-                inf.path.local.link_id,
-                inf.path.remote.link_id if inf.path.remote is not None else None,
-            )
-            self._arm_probe_timer()
-            sl.attempts += 1
-            self.slices_retried += 1
-            if sl.attempts > self.config.health.retry_limit:
-                if sl.route_idx != tcb.plan.route_idx:
-                    # another slice already substituted the backend: follow
-                    sl.hop = 0
-                    sl.attempts = 0
-                    self._issue(sl, tcb, retry_exclude=())
-                elif tcb.plan.substitute():
-                    self.backend_substitutions += 1
-                    sl.hop = 0
-                    sl.attempts = 0
-                    self._issue(sl, tcb, retry_exclude=())
-                else:
-                    self._fail_batch(tcb, EXHAUSTED_RETRIES)
-            else:
-                # In-band recovery: reschedule on an alternative path now.
-                self._issue(sl, tcb, retry_exclude=(inf.path.local.link_id,))
+            self._handle_wire_failure(inf, t_end)
         self._dispatch()
+
+    def _handle_wire_success(self, inf: _InflightSlice, t_end: float) -> None:
+        sl, tcb, tl = inf.sl, inf.tcb, self.store.get(inf.path.local.link_id)
+        t_obs = t_end - inf.scheduled_at
+        tl.on_complete(sl.length, inf.queued_at_schedule, t_obs)
+        self.health.observe(tl.desc.link_id, t_obs, inf.t_pred)
+        if tl.excluded:
+            self._arm_probe_timer()  # implicit exclusion -> start probing
+        route = tcb.plan.current
+        if sl.hop + 1 < len(route.stages):
+            sl.hop += 1
+            self._issue(sl, tcb, retry_exclude=())  # pipelined staged hop
+        else:
+            self._finish_slice(sl, tcb, t_end)
+
+    def _handle_wire_failure(self, inf: _InflightSlice, t_end: float) -> None:
+        sl, tcb, tl = inf.sl, inf.tcb, self.store.get(inf.path.local.link_id)
+        tl.on_cancel(sl.length)
+        self.health.on_path_failure(
+            inf.path.local.link_id,
+            inf.path.remote.link_id if inf.path.remote is not None else None,
+        )
+        self._arm_probe_timer()
+        sl.attempts += 1
+        self.slices_retried += 1
+        if sl.attempts > self.config.health.retry_limit:
+            if sl.route_idx != tcb.plan.route_idx:
+                # another slice already substituted the backend: follow
+                sl.hop = 0
+                sl.attempts = 0
+                self._issue(sl, tcb, retry_exclude=())
+            elif tcb.plan.substitute():
+                self.backend_substitutions += 1
+                sl.hop = 0
+                sl.attempts = 0
+                self._issue(sl, tcb, retry_exclude=())
+            else:
+                self._fail_batch(tcb, EXHAUSTED_RETRIES)
+        else:
+            # In-band recovery: reschedule on an alternative path now.
+            self._issue(sl, tcb, retry_exclude=(inf.path.local.link_id,))
+
+    # ------------------------------------------------- batched completion
+    def _on_wire_done_many(self, ops, now: float) -> None:
+        """Batched completion drain (`EngineConfig.wave_complete`): the
+        fabric delivers every tagged completion landing at one virtual
+        timestamp in a single call, in heap (== scalar delivery) order.
+
+        The walk peels the batch into maximal *vectorizable runs* —
+        consecutive successful final-hop completions while the pending ring
+        is empty — which drain through one `TelemetryStore.on_complete_many`
+        + `HealthMonitor.observe_many` + one redispatch, and consecutive
+        *failure runs*, which keep exact per-item bookkeeping order but
+        flush their retry posts through one batched `post_many`. Anything
+        else (staged-hop continuations, a non-empty pending ring, app
+        callbacks that may submit new work mid-batch) falls back to the
+        scalar per-item sequence, so the two drains stay bit-identical
+        (pinned in tests/test_complete_parity.py)."""
+        n = len(ops)
+        self.completions_drained += n
+        self.completion_batches += 1
+        if self._adaptive_wave_min:
+            self._drain_ewma = 0.75 * self._drain_ewma + 0.25 * n
+            self._tune_wave_min()
+        batches = self._batches
+        i = 0
+        while i < n:
+            op = ops[i]
+            inf = op.tag
+            if op.failed:
+                if self._pending:
+                    self._on_wire_complete(inf, False, now, "LinkFailed")
+                    i += 1
+                else:
+                    i = self._drain_failures(ops, i, now)
+                continue
+            if self._pending or \
+                    inf.sl.hop + 1 < len(inf.tcb.plan.current.stages):
+                self._on_wire_complete(inf, True, now, "")
+                i += 1
+                continue
+            # scan the maximal vectorizable run. While no live batch carries
+            # a done-callback (`_cb_batches == 0`) nothing mid-run can
+            # submit new work, so the scan is a pure stage-shape check;
+            # otherwise it also projects batch completions and cuts *after*
+            # an item that completes a batch with registered callbacks (the
+            # callback must observe the fully-drained per-item state exactly
+            # like the scalar sequence exposes it)
+            j = i
+            hops: Dict[int, int] = {}  # route lengths memo (static mid-scan)
+            run: List[_InflightSlice] = []
+            if not self._cb_batches:
+                while j < n:
+                    op2 = ops[j]
+                    if op2.failed:
+                        break
+                    inf2 = op2.tag
+                    tcb2 = inf2.tcb
+                    key = id(tcb2)
+                    n_stages = hops.get(key)
+                    if n_stages is None:
+                        n_stages = hops[key] = len(tcb2.plan.current.stages)
+                    if inf2.sl.hop + 1 < n_stages:
+                        break
+                    run.append(inf2)
+                    j += 1
+            else:
+                rem: Dict[int, int] = {}
+                while j < n:
+                    op2 = ops[j]
+                    if op2.failed:
+                        break
+                    inf2 = op2.tag
+                    tcb2 = inf2.tcb
+                    key = id(tcb2)
+                    n_stages = hops.get(key)
+                    if n_stages is None:
+                        n_stages = hops[key] = len(tcb2.plan.current.stages)
+                    if inf2.sl.hop + 1 < n_stages:
+                        break
+                    run.append(inf2)
+                    bid = tcb2.batch_id
+                    r = rem.get(bid)
+                    if r is None:
+                        r = batches[bid].remaining_slices
+                    r -= 1
+                    rem[bid] = r
+                    j += 1
+                    if r == 0 and batches[bid].callbacks:
+                        break
+            if j == i + 1:
+                self._on_wire_complete(inf, True, now, "")
+            else:
+                self._drain_success_run(run, now)
+            i = j
+
+    def _drain_success_run(self, infs: List[_InflightSlice], now: float) -> None:
+        """Vectorized drain of one run of successful final-hop completions.
+        The telemetry columns were pre-packed per slice at post time
+        (`_InflightSlice.drain`), so the gather is one zip. Order-equivalent
+        to the per-item scalar sequence because, with the pending ring
+        empty, each item's trailing `_dispatch` is a no-op, the EWMA/health
+        updates of distinct items touch disjoint telemetry state (per-slot
+        order is preserved inside `on_complete_many` / `observe_many`),
+        remote discharges are pure per-link sums nothing reads mid-run, and
+        `_finish_slice` reads none of it."""
+        self._inflight -= len(infs)
+        slots_c, len_c, queued_c, sched_c, pred_c, links_c, remote_c = zip(
+            *(inf.drain for inf in infs))
+        store = self.store
+        discharges: Dict[int, int] = {}  # remote link -> summed lengths
+        for rid, length in zip(remote_c, len_c):
+            if rid >= 0:
+                discharges[rid] = discharges.get(rid, 0) + length
+        discharge = store.discharge_remote
+        for rid, total in discharges.items():
+            discharge(rid, total)
+        slots = np.asarray(slots_c, dtype=np.int64)
+        lengths = np.asarray(len_c, dtype=np.int64)
+        queued_at = np.asarray(queued_c, dtype=np.int64)
+        t_obs = now - np.asarray(sched_c, dtype=np.float64)
+        store.on_complete_many(slots, lengths, queued_at, t_obs)
+        t_pred = np.asarray(pred_c, dtype=np.float64)
+        if self.health.observe_many(slots, links_c, t_obs, t_pred):
+            self._arm_probe_timer()
+        # one shared finish body with the scalar drain — any future
+        # completion side effect lands in both drains by construction
+        finish = self._finish_slice
+        for inf in infs:
+            finish(inf.sl, inf.tcb, now)
+        self._dispatch()
+
+    def _drain_failures(self, ops, i: int, now: float) -> int:
+        """Batched retry/requeue handler: process the run of consecutive
+        failed completions starting at `i` with exact per-item bookkeeping
+        (cancel charges, dual-layer exclusion, retry selection), deferring
+        every retry's fabric post into one `post_many` flush — no per-slice
+        closures, no per-slice post overhead, one trailing redispatch.
+        Returns the index after the last item processed (early when an app
+        callback refilled the pending ring: the rest of the batch takes the
+        scalar per-item path)."""
+        n = len(ops)
+        buffer: list = []
+        self._post_buffer = buffer
+        try:
+            while i < n and ops[i].failed:
+                self._on_wire_complete_nofanout(ops[i].tag, now)
+                i += 1
+                if self._pending:
+                    break
+        finally:
+            self._post_buffer = None
+        if buffer:
+            self.fabric.post_many(buffer, self._on_wire_done, tenant=self.name)
+        self._dispatch()
+        return i
+
+    def _on_wire_complete_nofanout(self, inf: _InflightSlice, now: float) -> None:
+        """One failure item inside the batched drain: identical to the
+        scalar `_on_wire_complete(ok=False)` minus the per-item dispatch
+        (a no-op while the pending ring is empty, which `_drain_failures`
+        guarantees)."""
+        self._inflight -= 1
+        if inf.path.remote is not None:
+            self.store.discharge_remote(inf.path.remote.link_id, inf.sl.length)
+        self._handle_wire_failure(inf, now)
 
     def _finish_slice(self, sl: Slice, tcb: _TransferCB, t_end: float) -> None:
         # Idempotent write to the absolute destination offset. For staged
-        # routes the intermediate hops are timing-only; bytes land here.
-        src_seg = self.segments.get(sl.src_segment)
-        dst_seg = self.segments.get(sl.dst_segment)
-        dst_seg.write(sl.dst_offset, src_seg.read(sl.src_offset, sl.length))
+        # routes the intermediate hops are timing-only; bytes land here. A
+        # phantom destination's write is a no-op, so skip materializing the
+        # source bytes at all (phantom reads allocate a zero buffer per
+        # slice — pure drain-loop waste for timing-only segments); bounds
+        # were validated for the whole transfer at submit time.
+        src_seg, dst_seg, dst_phantom = tcb.segs
+        if not dst_phantom:
+            dst_seg.write(sl.dst_offset, src_seg.read(sl.src_offset, sl.length))
         sl.state = SliceState.DONE
         sl.completed_at = t_end
         self.slice_latencies.append(t_end - sl.submitted_at)
@@ -568,23 +864,47 @@ class TentEngine:
         bc = self._batches[tcb.batch_id]
         bc.remaining_slices -= 1
         if bc.remaining_slices == 0 and bc.state == BatchState.SUBMITTED:
-            bc.state = BatchState.DONE
-            bc.completed_at = t_end
-            self._open_work -= 1
-            res = self._result(bc)
-            self.transfer_records.append(res)
-            for cb in bc.callbacks:
-                cb(bc)
+            self._complete_app_batch(bc, t_end)
+
+    def _complete_app_batch(self, bc: _BatchCB, t_end: float) -> None:
+        """Last slice of an application batch landed: surface the completion
+        through the hierarchical counters and run the registered callbacks."""
+        bc.state = BatchState.DONE
+        bc.completed_at = t_end
+        self._open_work -= 1
+        if bc.callbacks:
+            self._cb_batches -= 1
+        self.transfer_records.append(self._result(bc))
+        for cb in bc.callbacks:
+            cb(bc)
 
     def _fail_batch(self, tcb: _TransferCB, code: str) -> None:
-        bc = self._batches[tcb.batch_id]
-        if bc.state == BatchState.SUBMITTED:
-            bc.state = BatchState.FAILED
-            bc.error = code
-            bc.completed_at = self.fabric.now
-            self._open_work -= 1
-            for cb in bc.callbacks:
-                cb(bc)
+        # Inside the batched failure drain, deferred retry posts must reach
+        # the fabric before any app callback runs (a callback may submit and
+        # dispatch new work, and the scalar drain posted those retries
+        # first); the buffer is disarmed around the callbacks so work they
+        # trigger posts inline, exactly like the scalar sequence.
+        buf = self._post_buffer
+        if buf is not None:
+            self._post_buffer = None
+            if buf:
+                self.fabric.post_many(
+                    list(buf), self._on_wire_done, tenant=self.name)
+                buf.clear()
+        try:
+            bc = self._batches[tcb.batch_id]
+            if bc.state == BatchState.SUBMITTED:
+                bc.state = BatchState.FAILED
+                bc.error = code
+                bc.completed_at = self.fabric.now
+                self._open_work -= 1
+                if bc.callbacks:
+                    self._cb_batches -= 1
+                for cb in bc.callbacks:
+                    cb(bc)
+        finally:
+            if buf is not None:
+                self._post_buffer = buf
 
     # ----------------------------------------------------------- timers
     def _arm_reset_timer(self) -> None:

@@ -26,6 +26,11 @@ from .topology import LinkDesc, Topology
 # posting allocates no per-op closure.
 Completion = Callable[[bool, float, float, str], None]
 
+# batched completion sink: (ops, now) — every op in `ops` completed at the
+# same virtual timestamp `now`; failed ones carry op.failed=True. Registered
+# per shared completion callback via `Fabric.register_completion_sink`.
+CompletionSink = Callable[[List["WireOp"], float], None]
+
 # batched post spec: (src_link, dst_link, nbytes, extra_latency, bw_scale, tag)
 PostSpec = Tuple[int, Optional[int], int, float, float, object]
 
@@ -108,9 +113,14 @@ class Fabric:
     def __init__(self, topology: Topology, *, seed: int = 0, jitter: float = 0.02):
         self.topology = topology
         self.now = 0.0
-        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        # heap entries are (time, seq, item); `item` is either a zero-arg
+        # callable or a WireOp whose completion is due (op entries avoid a
+        # per-op `partial` allocation and let `step` recognize and group
+        # same-timestamp completion runs for the batched drain)
+        self._events: List[Tuple[float, int, object]] = []
         self._seq = itertools.count()
         self._rng = np.random.default_rng(seed)
+        self._completion_sinks: Dict[object, CompletionSink] = {}
         self.links: Dict[int, LinkState] = {
             l.link_id: LinkState(l, jitter, np.random.default_rng(seed * 7919 + l.link_id))
             for l in topology.links
@@ -125,11 +135,37 @@ class Fabric:
     def call_after(self, dt: float, fn: Callable[[], None]) -> None:
         self.call_at(self.now + dt, fn)
 
+    def register_completion_sink(self, on_complete, sink: CompletionSink) -> None:
+        """Route completions for ops posted with the shared callback
+        `on_complete` through `sink(ops, now)` in whole batches: one call
+        delivers every op completing at the same virtual timestamp whose
+        completion events are adjacent in the queue (heap order is execution
+        order, so grouping consecutive events cannot reorder anything
+        relative to timers or other callbacks at the same instant). This is
+        the drain half of the paper's batched feedback loop — the engine
+        registers its multi-completion handler here when
+        `EngineConfig.wave_complete` is on."""
+        self._completion_sinks[on_complete] = sink
+
     def step(self) -> bool:
-        if not self._events:
+        events = self._events
+        if not events:
             return False
-        t, _, fn = heapq.heappop(self._events)
+        t, _, fn = heapq.heappop(events)
         self.now = max(self.now, t)
+        if type(fn) is WireOp:
+            sink = (self._completion_sinks.get(fn.on_complete)
+                    if self._completion_sinks else None)
+            if sink is None:
+                self._complete(fn)
+                return True
+            batch = [fn]
+            cb = fn.on_complete
+            while events and events[0][0] == t and type(events[0][2]) is WireOp \
+                    and events[0][2].on_complete == cb:
+                batch.append(heapq.heappop(events)[2])
+            self._complete_batch(batch, sink)
+            return True
         fn()
         return True
 
@@ -243,7 +279,7 @@ class Fabric:
         src.outstanding[op.op_id] = op
         if dst is not None:
             dst.outstanding[op.op_id] = op
-        self.call_at(end, partial(self._complete, op))
+        self.call_at(end, op)  # op entry == its own completion event
         return op.op_id
 
     def post_many(
@@ -328,8 +364,7 @@ class Fabric:
             src.outstanding[op.op_id] = op
             if dst is not None:
                 dst.outstanding[op.op_id] = op
-            heapq.heappush(
-                events, (max(end, now), next(seq), partial(self._complete, op)))
+            heapq.heappush(events, (max(end, now), next(seq), op))
 
     def _complete(self, op: WireOp) -> None:
         if op.cancelled:
@@ -351,6 +386,54 @@ class Fabric:
         if op.tenant is not None:
             src.bytes_by_tenant[op.tenant] = src.bytes_by_tenant.get(op.tenant, 0) + op.nbytes
         self._deliver(op, True, op.start, self.now, "")
+
+    def _complete_batch(self, ops: List[WireOp], sink: CompletionSink) -> None:
+        """Per-op completion accounting for one same-timestamp batch, then a
+        single sink call. Semantically `_complete` run over the batch in heap
+        order, with delivery deferred to the end: the per-op bookkeeping
+        (mid-failure detection, release, byte counters) touches no state a
+        later op's bookkeeping reads, and anything the sink posts lands at a
+        strictly later (or later-seq same-time) heap position than every op
+        already in this batch — so deferral cannot reorder the simulation.
+        The only hoisted work is the failure-window probe: links with no
+        schedule at all (the common case) skip the window scan entirely."""
+        now = self.now
+        links = self.links
+        out = None  # lazily diverges from `ops` only when cancelled ops hide
+        for idx, op in enumerate(ops):
+            if op.cancelled:
+                # aborted by a link failure; its delivery is already queued
+                if out is None:
+                    out = ops[:idx]
+                continue
+            if out is not None:
+                out.append(op)
+            src = links[op.src_link]
+            dst = links[op.dst_link] if op.dst_link is not None else None
+            if src.failed or src.fail_windows or (
+                    dst is not None and (dst.failed or dst.fail_windows)):
+                mid_fail = any(
+                    l.is_failed(op.end) or l.is_failed(op.start)
+                    for l in ([src] + ([dst] if dst else []))
+                )
+            else:
+                mid_fail = False
+            src.outstanding.pop(op.op_id, None)
+            if dst is not None:
+                dst.outstanding.pop(op.op_id, None)
+            if mid_fail:
+                src.ops_failed += 1
+                op.failed = True
+            else:
+                src.bytes_completed += op.nbytes
+                src.ops_completed += 1
+                if op.tenant is not None:
+                    src.bytes_by_tenant[op.tenant] = (
+                        src.bytes_by_tenant.get(op.tenant, 0) + op.nbytes)
+        if out is None:
+            out = ops
+        if out:
+            sink(out, now)
 
     def _release(self, op: WireOp) -> None:
         self.links[op.src_link].outstanding.pop(op.op_id, None)

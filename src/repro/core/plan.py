@@ -81,7 +81,10 @@ class StageCandidates:
       * per-candidate numpy arrays (store slots, bandwidth, tier penalty,
         remoteness masks) — everything `TentPolicy.choose_wave` needs to
         gather a wave's telemetry straight out of the store's
-        struct-of-arrays state;
+        struct-of-arrays state. The `local_slot`/`bandwidth` columns also
+        seed each posted slice's `_InflightSlice` (slot + Eq. 1 prediction),
+        which is what lets the batched completion drain gather a whole
+        run's telemetry without ever re-resolving links;
       * `extra_latency` — the per-path submission latency with the engine's
         amortized posting overhead folded in, precomputed so the wave post
         loop does no arithmetic per slice.

@@ -60,6 +60,29 @@ class HealthMonitor:
         else:
             tl.consecutive_slow = 0
 
+    def observe_many(self, slots, link_ids, t_obs, t_pred) -> bool:
+        """`observe` over one completion batch (store slots + link ids +
+        observed/predicted times in drain order). The common all-healthy case
+        is one vectorized predicate plus one scatter (reset the slow streaks
+        of the non-excluded rails); as soon as any sample trips the slow
+        predicate the whole batch falls back to per-item `observe` in exact
+        order, because consecutive-slow streaks and the exclusion they
+        escalate into are order-sensitive. Returns True when any of the
+        batch's rails is excluded afterwards (the engine's cue to arm the
+        probe timer, exactly like the per-item `tl.excluded` check)."""
+        store = self.store
+        excluded = store.excluded_arr[slots]
+        cfg = self.cfg
+        slow = (t_pred > 0) & (t_obs > cfg.degrade_ratio * t_pred) \
+            & (t_obs > cfg.degrade_min_time) & ~excluded
+        if not slow.any():
+            live = ~excluded
+            store.slow_arr[slots[live] if not live.all() else slots] = 0
+            return bool(excluded.any())
+        for lid, to, tp in zip(link_ids, t_obs, t_pred):
+            self.observe(lid, float(to), float(tp))
+        return bool(store.excluded_arr[slots].any())
+
     # -- explicit signal (completion failures / timeouts) ---------------------
     def on_explicit_failure(self, link_id: int) -> None:
         tl = self.store.maybe(link_id)

@@ -434,3 +434,53 @@ def tent_choose_wave_jnp(queued, global_local, global_remote, bandwidth,
     (q_out, rr_out), (choices, queued_at) = jax.lax.scan(
         step, (q0, jnp.asarray(rr, dtype=jnp.int32)), lengths)
     return choices, queued_at, q_out, rr_out
+
+
+def tent_on_complete_many_jnp(beta0, beta1, queued, ewma_service, completions,
+                              ewma_alpha, beta0_alpha, bandwidth,
+                              slots, lengths, queued_at, t_obs):
+    """One-call JAX twin of `TelemetryStore.on_complete_many`: a `lax.scan`
+    over the completion batch applies the Eq. 1 EWMA feedback update one
+    completion at a time with `.at[slot]` scatters, so repeated slots within
+    a batch see exactly the sequential per-slot recurrence the scalar
+    `LinkTelemetry.on_complete` produces (parity is bit-exact under
+    `jax.experimental.enable_x64`, like the other kernels in this section).
+    Array arguments are full per-slot state vectors; `slots`/`lengths`/
+    `queued_at`/`t_obs` describe the batch in drain order. Returns the
+    updated `(beta0, beta1, queued, ewma_service, completions)` arrays."""
+    import jax
+    import jax.numpy as jnp
+
+    b0 = jnp.asarray(beta0, dtype=float)
+    b1 = jnp.asarray(beta1, dtype=float)
+    q = jnp.asarray(queued, dtype=float)
+    ew = jnp.asarray(ewma_service, dtype=float)
+    comp = jnp.asarray(completions)
+    alpha = jnp.asarray(ewma_alpha, dtype=float)
+    b0a = jnp.asarray(beta0_alpha, dtype=float)
+    bw = jnp.asarray(bandwidth, dtype=float)
+    batch = (jnp.asarray(slots, dtype=jnp.int32),
+             jnp.asarray(lengths, dtype=float),
+             jnp.asarray(queued_at, dtype=float),
+             jnp.asarray(t_obs, dtype=float))
+
+    def step(carry, inp):
+        b0_, b1_, q_, ew_, comp_ = carry
+        d, length, qas, tob = inp
+        a = alpha[d]
+        x = (qas + length) / bw[d]
+        sample = jnp.clip(
+            (tob - b0_[d]) / jnp.where(x > 0, x, 1.0), 0.05, 1e4)
+        b1d = jnp.where(x > 0, (1 - a) * b1_[d] + a * sample, b1_[d])
+        resid = jnp.maximum(0.0, tob - b1d * x)
+        b0d = (1 - b0a[d]) * b0_[d] + b0a[d] * resid
+        return (
+            b0_.at[d].set(b0d),
+            b1_.at[d].set(b1d),
+            q_.at[d].set(jnp.maximum(0.0, q_[d] - length)),
+            ew_.at[d].set((1 - a) * ew_[d] + a * tob),
+            comp_.at[d].add(1),
+        ), None
+
+    (b0, b1, q, ew, comp), _ = jax.lax.scan(step, (b0, b1, q, ew, comp), batch)
+    return b0, b1, q, ew, comp

@@ -173,7 +173,8 @@ class TelemetryStore:
     pressure through the diffusion table."""
 
     _FLOAT_ARRS = ("beta0_arr", "beta0_prior_arr", "beta1_arr",
-                   "ewma_alpha_arr", "beta0_alpha_arr", "ewma_service_arr")
+                   "ewma_alpha_arr", "beta0_alpha_arr", "ewma_service_arr",
+                   "bandwidth_arr")
     _INT_ARRS = ("queued_arr", "slow_arr", "completions_arr", "failures_arr")
 
     def __init__(self) -> None:
@@ -222,6 +223,9 @@ class TelemetryStore:
         self.completions_arr[slot] = init["completions"]
         self.failures_arr[slot] = init["failures"]
         self.ewma_service_arr[slot] = init["ewma_service_time"]
+        # nominal bandwidth mirrored into the arrays (LinkDesc is frozen) so
+        # the batched completion update never chases desc attributes
+        self.bandwidth_arr[slot] = desc.bandwidth
         self.excluded_arr[slot] = init["excluded"]
         self._slots[desc.link_id] = slot
         self._link_ids.append(desc.link_id)
@@ -326,6 +330,76 @@ class TelemetryStore:
             if q or prev:
                 self.global_load[lid] = self.global_load.get(lid, 0) - prev + q
                 self._published[lid] = q
+
+    # -- batched completion feedback (the drain half of the closed loop) -----
+    def on_complete_many(self, slots, lengths, queued_at_schedule, t_obs) -> None:
+        """Vectorized twin of `LinkTelemetry.on_complete` over one completion
+        batch, **exactly** (bit-for-bit) equal to looping `on_complete` in
+        batch order.
+
+        Per-slot the EWMA recurrence is order-sensitive, so repeated slots
+        within one batch are applied in *occurrence rounds*: round r updates
+        every slot's r-th occurrence, each round touches a slot at most once,
+        and updates of distinct slots touch disjoint array elements — so the
+        per-slot sequence is preserved while each round runs as whole-array
+        float64 arithmetic (the same IEEE operations, in the same per-slot
+        order, the scalar path performs). `slots`/`lengths`/
+        `queued_at_schedule` are int64 arrays, `t_obs` float64, all in drain
+        order."""
+        slots = np.asarray(slots, dtype=np.int64)
+        n = slots.shape[0]
+        if n == 0:
+            return
+        lengths = np.asarray(lengths, dtype=np.int64)
+        queued_at = np.asarray(queued_at_schedule, dtype=np.int64)
+        t_obs = np.asarray(t_obs, dtype=np.float64)
+        if n == 1:
+            # single completion: the scalar view update beats any gather
+            self._views[slots[0]].on_complete(
+                int(lengths[0]), int(queued_at[0]), float(t_obs[0]))
+            return
+        order = np.argsort(slots, kind="stable")
+        ss = slots[order]
+        starts = np.empty(n, dtype=bool)
+        starts[0] = True
+        np.not_equal(ss[1:], ss[:-1], out=starts[1:])
+        if starts.all():  # all slots distinct: one round, no indirection
+            self._complete_round(slots, lengths, queued_at, t_obs)
+            return
+        idx = np.arange(n)
+        rank = idx - np.maximum.accumulate(np.where(starts, idx, 0))
+        for r in range(int(rank.max()) + 1):
+            sel = order[rank == r]
+            self._complete_round(
+                slots[sel], lengths[sel], queued_at[sel], t_obs[sel])
+
+    def _complete_round(self, idx, lengths, queued_at, t_obs) -> None:
+        """One round of the batched EWMA update: `idx` holds *distinct* store
+        slots. Mirrors `LinkTelemetry.on_complete` operation for operation."""
+        self.queued_arr[idx] = np.maximum(0, self.queued_arr[idx] - lengths)
+        self.completions_arr[idx] += 1
+        alpha = self.ewma_alpha_arr[idx]
+        x = (queued_at + lengths) / self.bandwidth_arr[idx]
+        b1 = self.beta1_arr[idx]
+        pos = x > 0
+        if pos.all():
+            sample = (t_obs - self.beta0_arr[idx]) / x
+            sample = np.minimum(np.maximum(sample, 0.05), 1e4)
+            b1 = (1 - alpha) * b1 + alpha * sample
+            self.beta1_arr[idx] = b1
+        elif pos.any():
+            p = np.flatnonzero(pos)
+            ip = idx[p]
+            sample = (t_obs[p] - self.beta0_arr[ip]) / x[p]
+            sample = np.minimum(np.maximum(sample, 0.05), 1e4)
+            b1p = (1 - alpha[p]) * b1[p] + alpha[p] * sample
+            b1[p] = b1p
+            self.beta1_arr[ip] = b1p
+        resid = np.maximum(0.0, t_obs - b1 * x)
+        b0a = self.beta0_alpha_arr[idx]
+        self.beta0_arr[idx] = (1 - b0a) * self.beta0_arr[idx] + b0a * resid
+        self.ewma_service_arr[idx] = (
+            (1 - alpha) * self.ewma_service_arr[idx] + alpha * t_obs)
 
     # -- bulk state ----------------------------------------------------------
     def reset_all(self) -> None:

@@ -215,6 +215,8 @@ class ScenarioRunner:
                 "engines_left": float(counters.pop("engines_left")),
                 "slices_issued": float(counters.pop("slices_issued")),
                 "waves": float(counters.pop("waves")),
+                "completions_drained": float(counters.pop("completions_drained")),
+                "completion_batches": float(counters.pop("completion_batches")),
             }
             return self._reduce(
                 policy, fabric=cluster.fabric, audit=audit,
@@ -234,6 +236,8 @@ class ScenarioRunner:
             extra={
                 "slices_issued": float(engine.slices_issued),
                 "waves": float(engine.waves),
+                "completions_drained": float(engine.completions_drained),
+                "completion_batches": float(engine.completion_batches),
             })
 
     def run(self) -> ScenarioReport:

@@ -356,7 +356,11 @@ class EngineParams:
     (the default) runs the vectorized wave scheduler over cached per-stage
     candidate sets; both off reproduces the pre-wave one-slice-at-a-time
     loop with bit-identical scheduling decisions (the wave-parity regression
-    and `benchmarks/spray_hotpath.py` rely on that toggle)."""
+    and `benchmarks/spray_hotpath.py` rely on that toggle). `wave_complete`
+    toggles the batched completion drain the same way (off = per-completion
+    scalar drain, bit-identical outcomes), and `wave_min` pins the
+    scalar/wave dispatch crossover instead of letting the engine tune it
+    online."""
 
     slice_bytes: int = 64 * 1024
     max_slices: int = 64
@@ -367,6 +371,8 @@ class EngineParams:
     retry_limit: int = 8
     wave: bool = True
     candidate_cache: bool = True
+    wave_complete: bool = True
+    wave_min: Union[int, None] = None
 
     def to_engine_config(self, policy: str) -> EngineConfig:
         return EngineConfig(
@@ -378,6 +384,8 @@ class EngineParams:
             reset_interval=self.reset_interval,
             wave=self.wave,
             candidate_cache=self.candidate_cache,
+            wave_complete=self.wave_complete,
+            wave_min=self.wave_min,
             health=HealthConfig(
                 probe_interval=self.probe_interval, retry_limit=self.retry_limit
             ),

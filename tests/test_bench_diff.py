@@ -1,0 +1,150 @@
+"""Bench trajectory diff driver: asymmetric-document robustness.
+
+`benchmarks/diff.py` compares two BENCH_*.json trajectories that may come
+from different revisions of the tooling — scenarios appear and disappear,
+and report schemas drift. Asymmetries must be *reported*, never crash the
+diff and never be silently skipped (a half-written candidate must not look
+healthy to `--fail-on-regression`).
+"""
+import json
+
+import pytest
+
+from benchmarks.diff import SCHEMA, diff_reports, load_reports, main
+
+
+def _report(name, throughput=1e9, ok=True, policy="tent", **overrides):
+    rep = {
+        "policy": policy,
+        "ok": True,
+        "throughput": throughput,
+        "recovery_ms": -1.0,
+        "stall_ms": -1.0,
+        "extra": {},
+    }
+    rep.update(overrides)
+    return {
+        "scenario": name,
+        "ok": ok,
+        "violations": [],
+        "policies": {policy: rep},
+        "spec": {"policies": [policy]},
+    }
+
+
+def _doc(path, reports):
+    path.write_text(json.dumps({
+        "schema": SCHEMA,
+        "generated_unix": 0.0,
+        "scenarios": len(reports),
+        "violated": 0,
+        "reports": reports,
+    }))
+    return str(path)
+
+
+class TestScenarioAsymmetry:
+    def test_scenario_only_in_candidate_is_reported_as_added(self, tmp_path, capsys):
+        old = _doc(tmp_path / "old.json", [_report("a")])
+        new = _doc(tmp_path / "new.json", [_report("a"), _report("b")])
+        main([old, new, "--fail-on-regression", "5"])  # must not crash/exit 1
+        out = capsys.readouterr().out
+        assert "+ b: only in the new trajectory" in out
+
+    def test_scenario_only_in_baseline_is_reported_as_removed(self, tmp_path, capsys):
+        old = _doc(tmp_path / "old.json", [_report("a"), _report("gone")])
+        new = _doc(tmp_path / "new.json", [_report("a")])
+        main([old, new, "--fail-on-regression", "5"])
+        out = capsys.readouterr().out
+        assert "- gone: only in the old trajectory" in out
+
+    def test_disjoint_trajectories_still_render(self, tmp_path, capsys):
+        old = _doc(tmp_path / "old.json", [_report("only_old")])
+        new = _doc(tmp_path / "new.json", [_report("only_new")])
+        main([old, new])
+        out = capsys.readouterr().out
+        assert "+ only_new" in out and "- only_old" in out
+
+
+class TestMetricAsymmetry:
+    def _throughputless(self, name):
+        rep = _report(name)
+        del rep["policies"]["tent"]["throughput"]
+        return rep
+
+    def test_metric_missing_in_baseline_reports_not_crashes(self, tmp_path, capsys):
+        old = _doc(tmp_path / "old.json", [self._throughputless("a"), _report("b")])
+        new = _doc(tmp_path / "new.json", [_report("a"), _report("b")])
+        main([old, new])  # reporting mode: surfaced, not a crash
+        err = capsys.readouterr().err
+        assert "baseline is missing metric 'throughput'" in err
+        assert "a [tent]" in err
+
+    def test_metric_missing_in_candidate_reports_not_crashes(self, tmp_path, capsys):
+        old = _doc(tmp_path / "old.json", [_report("a"), _report("b")])
+        new = _doc(tmp_path / "new.json", [self._throughputless("a"), _report("b")])
+        main([old, new])
+        err = capsys.readouterr().err
+        assert "candidate is missing metric 'throughput'" in err
+
+    def test_incomparable_scenarios_fail_the_regression_gate(self, tmp_path, capsys):
+        """A half-written candidate (metric missing) must not pass
+        --fail-on-regression by being impossible to compare."""
+        old = _doc(tmp_path / "old.json", [_report("a"), _report("b")])
+        new = _doc(tmp_path / "new.json", [self._throughputless("a"), _report("b")])
+        with pytest.raises(SystemExit, match="1"):
+            main([old, new, "--fail-on-regression", "5"])
+        assert "could not be compared" in capsys.readouterr().err
+
+    def test_expectation_flip_waiver_still_gates_throughput(self, tmp_path, capsys):
+        """--allow-expectation-regressions excuses ok->violated flips (noisy
+        wall-clock floors) but never a real throughput drop."""
+        old = _doc(tmp_path / "old.json", [_report("a", ok=True)])
+        new = _doc(tmp_path / "new.json", [_report("a", ok=False)])
+        main([old, new, "--fail-on-regression", "5",
+              "--allow-expectation-regressions"])
+        assert "warning: expectations regressed" in capsys.readouterr().err
+        with pytest.raises(SystemExit, match="1"):
+            main([old, new, "--fail-on-regression", "5"])
+        dropped = _doc(tmp_path / "drop.json", [_report("a", throughput=1e8, ok=False)])
+        with pytest.raises(SystemExit, match="1"):
+            main([old, dropped, "--fail-on-regression", "5",
+                  "--allow-expectation-regressions"])
+
+    def test_missing_secondary_metrics_render_as_not_applicable(self, tmp_path, capsys):
+        rep = _report("a")
+        del rep["policies"]["tent"]["recovery_ms"]
+        del rep["policies"]["tent"]["stall_ms"]
+        old = _doc(tmp_path / "old.json", [rep])
+        new = _doc(tmp_path / "new.json", [_report("a")])
+        main([old, new])  # missing recovery/stall: still a comparable row
+        out = capsys.readouterr().out
+        assert "a" in out and "tent" in out
+
+    def test_incomparable_rows_surface_in_diff_reports(self, tmp_path):
+        old = load_reports(_doc(tmp_path / "old.json", [self._throughputless("a")]))
+        new = load_reports(_doc(tmp_path / "new.json", [_report("a")]))
+        rows, added, removed, skipped, incomparable = diff_reports(old, new)
+        assert rows == [] and added == [] and removed == [] and skipped == []
+        assert len(incomparable) == 1 and "a [tent]" in incomparable[0]
+
+
+class TestDocumentShape:
+    def test_document_without_reports_section_errors_cleanly(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps({"schema": SCHEMA}))
+        with pytest.raises(SystemExit, match="no 'reports' section"):
+            load_reports(str(p))
+
+    def test_report_without_scenario_name_errors_cleanly(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps({
+            "schema": SCHEMA, "reports": [{"policies": {}}]}))
+        with pytest.raises(SystemExit, match="without a 'scenario' name"):
+            load_reports(str(p))
+
+    def test_regression_gate_still_fires_on_real_drop(self, tmp_path):
+        old = _doc(tmp_path / "old.json", [_report("a", throughput=1e9)])
+        new = _doc(tmp_path / "new.json", [_report("a", throughput=0.5e9)])
+        with pytest.raises(SystemExit, match="1"):
+            main([old, new, "--fail-on-regression", "5"])

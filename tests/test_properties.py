@@ -276,6 +276,109 @@ class TestWaveParity:
         assert j_rr == np_rr
 
 
+def _paired_stores(n_links, queues, beta0s, beta1s):
+    """Two identical stores: one takes the scalar per-completion path, the
+    other the batched path; every array must come out bit-equal."""
+    out = []
+    for _ in range(2):
+        store = TelemetryStore()
+        for i in range(n_links):
+            desc = LinkDesc(link_id=i, node=0, link_class=LinkClass.RDMA,
+                            index=i, numa=0, bandwidth=25e9, base_latency=5e-6)
+            tl = store.ensure(desc)
+            tl.queued_bytes = queues[i % len(queues)]
+            tl.beta0 = beta0s[i % len(beta0s)]
+            tl.beta1 = beta1s[i % len(beta1s)]
+        out.append(store)
+    return out
+
+
+_COMPLETE_ARRS = ("beta0_arr", "beta1_arr", "queued_arr", "ewma_service_arr",
+                  "completions_arr", "slow_arr", "failures_arr")
+
+
+class TestCompleteManyParity:
+    """`TelemetryStore.on_complete_many` must be **exactly** (bit-for-bit)
+    equal to looping `on_complete` over the batch — including repeated slots
+    within one batch, where the per-slot EWMA recurrence is order-sensitive
+    and the batched path must replay occurrences sequentially."""
+
+    @given(
+        n_links=st.integers(1, 6),
+        queues=st.lists(st.integers(0, 1 << 30), min_size=1, max_size=6),
+        beta0s=st.lists(st.floats(0.0, 1e-2), min_size=1, max_size=6),
+        beta1s=st.lists(st.floats(0.05, 50.0), min_size=1, max_size=6),
+        batch=st.lists(
+            st.tuples(st.integers(0, 5),           # slot (repeats likely)
+                      st.integers(0, 1 << 22),     # length (0 hits x == 0)
+                      st.integers(0, 1 << 24),     # queued_at_schedule
+                      st.floats(0.0, 10.0)),       # t_obs
+            min_size=1, max_size=32),
+    )
+    @settings(max_examples=150, deadline=None)
+    def test_on_complete_many_bit_equals_scalar_loop(
+            self, n_links, queues, beta0s, beta1s, batch):
+        scalar, batched = _paired_stores(n_links, queues, beta0s, beta1s)
+        items = [(slot % n_links, L, qas, tob) for slot, L, qas, tob in batch]
+        for slot, L, qas, tob in items:
+            scalar._views[slot].on_complete(L, qas, tob)
+        batched.on_complete_many(
+            np.asarray([i[0] for i in items], dtype=np.int64),
+            np.asarray([i[1] for i in items], dtype=np.int64),
+            np.asarray([i[2] for i in items], dtype=np.int64),
+            np.asarray([i[3] for i in items], dtype=np.float64))
+        for name in _COMPLETE_ARRS:
+            a = getattr(scalar, name)[:scalar.n]
+            b = getattr(batched, name)[:batched.n]
+            assert (a == b).all(), f"{name}: {a} != {b}"
+
+    @given(
+        n_links=st.integers(1, 5),
+        queues=st.lists(st.integers(0, 1 << 28), min_size=1, max_size=5),
+        beta0s=st.lists(st.floats(0.0, 1e-2), min_size=1, max_size=5),
+        beta1s=st.lists(st.floats(0.05, 50.0), min_size=1, max_size=5),
+        batch=st.lists(
+            st.tuples(st.integers(0, 4), st.integers(0, 1 << 22),
+                      st.integers(0, 1 << 24), st.floats(0.0, 10.0)),
+            min_size=1, max_size=16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_jnp_scan_twin_matches_numpy(
+            self, n_links, queues, beta0s, beta1s, batch):
+        """`tent_on_complete_many_jnp` under x64 replays the same update."""
+        from jax.experimental import enable_x64
+
+        from repro.core.scheduler import tent_on_complete_many_jnp
+
+        ref, _ = _paired_stores(n_links, queues, beta0s, beta1s)
+        items = [(slot % n_links, L, qas, tob) for slot, L, qas, tob in batch]
+        n = ref.n
+        state = {name: getattr(ref, name)[:n].copy()
+                 for name in ("beta0_arr", "beta1_arr", "queued_arr",
+                              "ewma_service_arr", "completions_arr",
+                              "ewma_alpha_arr", "beta0_alpha_arr",
+                              "bandwidth_arr")}
+        for slot, L, qas, tob in items:
+            ref._views[slot].on_complete(L, qas, tob)
+        with enable_x64():
+            b0, b1, q, ew, comp = tent_on_complete_many_jnp(
+                state["beta0_arr"], state["beta1_arr"],
+                state["queued_arr"], state["ewma_service_arr"],
+                state["completions_arr"], state["ewma_alpha_arr"],
+                state["beta0_alpha_arr"], state["bandwidth_arr"],
+                np.asarray([i[0] for i in items]),
+                np.asarray([i[1] for i in items]),
+                np.asarray([i[2] for i in items]),
+                np.asarray([i[3] for i in items], dtype=np.float64))
+            b0, b1, q = np.asarray(b0), np.asarray(b1), np.asarray(q)
+            ew, comp = np.asarray(ew), np.asarray(comp)
+        assert (b0 == ref.beta0_arr[:n]).all()
+        assert (b1 == ref.beta1_arr[:n]).all()
+        assert (q == ref.queued_arr[:n]).all()
+        assert (ew == ref.ewma_service_arr[:n]).all()
+        assert (comp == ref.completions_arr[:n]).all()
+
+
 class TestEwmaBounded:
     @given(
         obs=st.lists(st.floats(1e-7, 10.0), min_size=1, max_size=50),
