@@ -1,0 +1,97 @@
+# Serving closed-loop trajectory: the three serving scenarios as one BENCH doc.
+"""Benchmark the event-driven serving closed loop (paper §5.1).
+
+Runs the serving scenario family (HiCache promotion under a flapping NIC,
+prefill->decode handoff incast, checkpoint refresh overlapped with decode)
+and writes a ``tent-scenario-reports/v1`` document, so `benchmarks/diff.py`
+can gate serving-tier regressions the same way it gates the spray hot path:
+
+    python -m benchmarks.serving_closed_loop --out BENCH_serving.json
+    python -m benchmarks.diff BENCH_serving.json BENCH_serving_new.json \
+        --fail-on-regression 5
+
+All times are virtual-fabric seconds, so the trajectory is deterministic and
+machine-independent: any drift in the diff is a code change, not noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.scenarios import ScenarioRunner, get, names
+
+SCHEMA = "tent-scenario-reports/v1"
+SERVING_PREFIX = "serving_"
+
+
+def serving_names() -> list:
+    return [n for n in names() if n.startswith(SERVING_PREFIX)]
+
+
+def run(out: str | None = None, only: str | None = None) -> int:
+    """Run the serving scenarios; returns the number of violated scenarios."""
+    picked = [only] if only else serving_names()
+    docs = []
+    violated = 0
+    for name in picked:
+        spec = get(name)
+        t0 = time.time()
+        report = ScenarioRunner(spec).run()
+        doc = report.to_dict()
+        doc["wall_seconds"] = round(time.time() - t0, 3)
+        docs.append(doc)
+        prim = report.policies[spec.primary_policy]
+        print(
+            f"{name}: {spec.primary_policy} {prim.throughput:.1f} tok/s, "
+            f"p90 TTFT {prim.extra.get('p90_ttft_s', 0.0):.3f}s, "
+            f"p99 TPOT {prim.extra.get('p99_tpot_s', 0.0):.4f}s, "
+            f"overlap {prim.extra.get('overlap_ratio', 0.0):.2f}x",
+            file=sys.stderr)
+        if report.violations:
+            violated += 1
+            for v in report.violations:
+                print(f"{name}: VIOLATION: {v}", file=sys.stderr)
+    if out:
+        with open(out, "w") as f:
+            json.dump(
+                {
+                    "schema": SCHEMA,
+                    "generated_unix": round(time.time(), 3),
+                    "scenarios": len(docs),
+                    "violated": violated,
+                    "reports": docs,
+                },
+                f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(docs)} reports to {out}", file=sys.stderr)
+    else:
+        for doc in docs:
+            print(json.dumps(doc))
+    return violated
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", metavar="PATH",
+                    help="write the reports as one tent-scenario-reports/v1 "
+                         "document (bench trajectory tracking)")
+    ap.add_argument("--scenario", metavar="NAME",
+                    help="run a single serving scenario instead of the family")
+    ap.add_argument("--list", action="store_true",
+                    help="list the serving scenario family and exit")
+    args = ap.parse_args(argv)
+    if args.list:
+        for n in serving_names():
+            print(f"{n:28s} {get(n).description}")
+        return
+    if args.scenario and args.scenario not in serving_names():
+        ap.error(f"unknown serving scenario {args.scenario!r} "
+                 f"(have: {', '.join(serving_names())})")
+    if run(out=args.out, only=args.scenario):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

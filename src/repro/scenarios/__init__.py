@@ -12,6 +12,7 @@ from .spec import (
     FaultEvent,
     ScenarioSpec,
     ServeWorkload,
+    ServingWorkload,
     TopologyParams,
     degrade_ramp,
     engine_join,
@@ -30,6 +31,8 @@ from .workloads import (
     host_loc,
     run_closed_loop,
     run_cluster_workload,
+    run_serve,
+    run_serving,
     run_workload,
 )
 
@@ -37,10 +40,10 @@ __all__ = [
     "SCENARIOS", "get", "names", "PolicyReport", "ScenarioReport",
     "ScenarioRunner", "run_scenario", "BackgroundSpec", "CheckpointWorkload",
     "ClosedLoopWorkload", "ClusterWorkload", "EngineParams", "Expectations",
-    "FaultEvent", "ScenarioSpec", "ServeWorkload", "TopologyParams",
-    "degrade_ramp", "engine_join", "engine_leave", "flap_storm",
-    "rail_outage", "StreamDriver", "WorkloadOutcome",
+    "FaultEvent", "ScenarioSpec", "ServeWorkload", "ServingWorkload",
+    "TopologyParams", "degrade_ramp", "engine_join", "engine_leave",
+    "flap_storm", "rail_outage", "StreamDriver", "WorkloadOutcome",
     "add_background_turbulence", "add_tenant_contention", "drive_closed_loop",
     "drive_streams", "gpu_loc", "host_loc", "run_closed_loop",
-    "run_cluster_workload", "run_workload",
+    "run_cluster_workload", "run_serve", "run_serving", "run_workload",
 ]

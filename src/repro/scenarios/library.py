@@ -28,6 +28,7 @@ from .spec import (
     FaultEvent,
     ScenarioSpec,
     ServeWorkload,
+    ServingWorkload,
     TopologyParams,
     degrade_ramp,
     engine_join,
@@ -175,6 +176,66 @@ _register(ScenarioSpec(
     workload=CheckpointWorkload(nbytes=512 << 20),
     background=BackgroundSpec(turbulence_severity=0.6),
     expectations=Expectations(tent_vs_baseline=1.0),
+))
+
+# -- serving closed loop (event-driven, async transfer intents) --------------
+
+_register(ScenarioSpec(
+    "serving_closed_loop_flap",
+    "HiCache serving as an event-driven closed loop under a flapping store-"
+    "side NIC: concurrent requests' promotions overlap and contend on the "
+    "fabric while one rail repeatedly browns out to 5% bandwidth. The "
+    "engine's telemetry must route promotions around the flapping rail so "
+    "TTFT P90 and the SLOs hold where blind striping is dragged down.",
+    topology=TopologyParams(nic_bw=5e8),
+    workload=ServingWorkload(clients=6, concurrency=3, turns=3,
+                             output_tokens=8),
+    # a flap expressed as repeated deep brownouts (degrade, not fail: the
+    # serving timeline is too sparse for the stall/dip recovery metrics)
+    faults=(FaultEvent("degrade", 1, 0, at=0.2, until=1.2, factor=0.05),
+            FaultEvent("degrade", 1, 0, at=1.6, until=2.6, factor=0.05),
+            FaultEvent("degrade", 1, 1, at=0.8, until=2.0, factor=0.05)),
+    background=BackgroundSpec(turbulence_severity=0.7),
+    expectations=Expectations(
+        tent_vs_baseline=1.0, ttft_p90_vs_baseline=1.0,
+        max_ttft_p99_s=1.5, max_tpot_p99_s=0.1),
+))
+
+_register(ScenarioSpec(
+    "serving_pd_handoff_incast",
+    "Prefill->decode disaggregation as async transfer intents: every "
+    "request's KV pages ship from the prefill node to the decode node the "
+    "moment its chunked prefill ends, so concurrent handoffs form a "
+    "receiver-side incast on the decode node's rails while decode compute "
+    "proceeds on already-landed caches.",
+    topology=TopologyParams(
+        nic_bw=5e8,
+        rail_bw_factors=((4, 0.3), (5, 0.3), (6, 0.3), (7, 0.3))),
+    workload=ServingWorkload(clients=6, concurrency=4, turns=2,
+                             use_hicache=False, pd_handoff=True,
+                             output_tokens=8),
+    background=BackgroundSpec(turbulence_severity=0.6),
+    expectations=Expectations(
+        tent_vs_baseline=1.0, ttft_p90_vs_baseline=1.0,
+        max_ttft_p99_s=2.5),
+))
+
+_register(ScenarioSpec(
+    "serving_checkpoint_overlap",
+    "Checkpoint-update-during-decode: an overlapped CheckpointEngine weight "
+    "refresh (async all-rank pull) contends with live HiCache promotions "
+    "mid-run. The refresh must not blow the serving SLOs, and the spraying "
+    "engine must keep both flows moving where static striping serializes "
+    "them behind the same rails.",
+    topology=TopologyParams(nic_bw=5e8),
+    workload=ServingWorkload(clients=6, concurrency=3, turns=3,
+                             output_tokens=8,
+                             checkpoint_nbytes=256 << 20,
+                             checkpoint_updates=2),
+    background=BackgroundSpec(turbulence_severity=0.6),
+    expectations=Expectations(
+        tent_vs_baseline=1.0, ttft_p90_vs_baseline=1.0,
+        max_ttft_p99_s=1.5, max_tpot_p99_s=0.1),
 ))
 
 # -- hetero-fabric portability (Table 4 beyond RDMA/TCP) ---------------------

@@ -430,6 +430,22 @@ class ScenarioRunner:
                     out.append(
                         f"{primary.policy} {attr} {ours:.4f}s > "
                         f"{factor:.2f} x {p} ({theirs:.4f}s)")
+        # serving SLOs (reported by the serving executors via `extra`)
+        if exp.ttft_p90_vs_baseline > 0:
+            ours = primary.extra.get("p90_ttft_s", 0.0)
+            for p in self.spec.baseline_policies:
+                theirs = reports[p].extra.get("p90_ttft_s", 0.0)
+                if theirs > 0 and ours > exp.ttft_p90_vs_baseline * theirs:
+                    out.append(
+                        f"{primary.policy} TTFT P90 {ours:.4f}s > "
+                        f"{exp.ttft_p90_vs_baseline:.2f} x {p} ({theirs:.4f}s)")
+        for key, limit, label in (
+                ("p99_ttft_s", exp.max_ttft_p99_s, "TTFT P99"),
+                ("p99_tpot_s", exp.max_tpot_p99_s, "TPOT P99")):
+            if limit > 0 and primary.extra.get(key, 0.0) > limit:
+                out.append(
+                    f"{primary.policy} {label} {primary.extra[key]:.4f}s > "
+                    f"{limit:.4f}s SLO")
         return out
 
 

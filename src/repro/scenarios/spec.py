@@ -215,6 +215,39 @@ class ServeWorkload:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServingWorkload:
+    """Event-driven serving closed loop on the wave engine (paper §5.1): each
+    request's HiCache promotion, prefill->decode KV handoff, and decode are
+    stages whose transfers are asynchronous TENT batches — concurrent
+    requests genuinely overlap and contend on the fabric, chunked prefill
+    interleaves with decode, and an optional checkpoint refresh runs
+    overlapped with live traffic. TTFT/TPOT SLOs are declared in the spec's
+    `Expectations` and evaluated by the runner."""
+
+    kind: ClassVar[str] = "serving"
+    model: str = "qwen3-moe-235b-a22b"
+    clients: int = 6
+    concurrency: int = 3
+    turns: int = 3
+    input_tokens: int = 1024
+    output_tokens: int = 64
+    page_tokens: int = 256
+    chunk_tokens: int = 512  # prefill chunk; 0 = monolithic prefill
+    decode_chunk: int = 16
+    use_hicache: bool = True
+    pd_handoff: bool = False  # ship prefill->decode KV through TENT
+    checkpoint_nbytes: int = 0  # > 0: overlapped weight refresh of this size
+    checkpoint_updates: int = 0
+    gpu_node: int = 0
+    store_node: int = 1
+    decode_node: int = 1
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServingWorkload":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class CheckpointWorkload:
     """Checkpoint-engine broadcast (paper §5.1.2 / Table 3): every rank pulls
     its weight shard from the parameter-server node in one declarative batch."""
@@ -313,11 +346,15 @@ class ClusterWorkload:
         return cls(**d)
 
 
-Workload = Union[ClosedLoopWorkload, ServeWorkload, CheckpointWorkload, ClusterWorkload]
+Workload = Union[
+    ClosedLoopWorkload, ServeWorkload, ServingWorkload, CheckpointWorkload,
+    ClusterWorkload,
+]
 
 WORKLOAD_KINDS: Dict[str, type] = {
     w.kind: w
-    for w in (ClosedLoopWorkload, ServeWorkload, CheckpointWorkload, ClusterWorkload)
+    for w in (ClosedLoopWorkload, ServeWorkload, ServingWorkload,
+              CheckpointWorkload, ClusterWorkload)
 }
 
 
@@ -420,6 +457,13 @@ class Expectations:
     # primary P50 latency <= factor * every baseline's P50 (0 disables);
     # mice-dominated mixes use this to pin down head-of-line isolation
     p50_vs_baseline: float = 0.0
+    # serving SLOs (serving workloads; evaluated against the primary policy's
+    # reported extra["p90_ttft_s"] / extra["p99_ttft_s"] / extra["p99_tpot_s"])
+    # primary TTFT P90 <= factor * every baseline's TTFT P90 (0 disables)
+    ttft_p90_vs_baseline: float = 0.0
+    # absolute virtual-seconds ceilings on the primary policy (0 disables)
+    max_ttft_p99_s: float = 0.0
+    max_tpot_p99_s: float = 0.0
     # no app-visible failures and no slice unaccounted for, any policy
     zero_lost_slices: bool = True
 

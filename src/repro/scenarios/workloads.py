@@ -20,6 +20,7 @@ from .spec import (
     ClusterWorkload,
     FaultEvent,
     ServeWorkload,
+    ServingWorkload,
     Workload,
 )
 
@@ -271,9 +272,93 @@ def run_serve(engine: TentEngine, wl: ServeWorkload) -> WorkloadOutcome:
     for r, v in st.round_avg_ttft.items():
         extra[f"round_avg_ttft_R{r}"] = v
     return WorkloadOutcome(
-        completions=[],
+        completions=list(st.request_log),
         bytes_total=st.bytes_promoted,
         makespan=engine.fabric.now - t0 if engine.fabric.now > t0 else st.makespan,
+        extra=extra,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop serving executor (event-driven, async transfer intents)
+# ---------------------------------------------------------------------------
+
+
+def run_serving(engine: TentEngine, wl: ServingWorkload) -> WorkloadOutcome:
+    from ..configs import get_config
+    from ..serving import (
+        CheckpointEngine,
+        HiCache,
+        ServeSimConfig,
+        ServingSimulator,
+        from_table2,
+        kv_bytes_per_token,
+        make_cpu_pool,
+        make_disk_pool,
+        make_gpu_pool,
+    )
+
+    cfg = get_config(wl.model)
+    hc: Optional[HiCache] = None
+    if wl.use_hicache:
+        pb = kv_bytes_per_token(cfg) * wl.page_tokens
+        turns_pages = wl.turns * wl.input_tokens // wl.page_tokens + 2
+        hc = HiCache(
+            engine, cfg,
+            gpu_pool=make_gpu_pool(engine, wl.gpu_node, 0, page_bytes=pb,
+                                   num_pages=3 * turns_pages, materialize=False),
+            cpu_pool=make_cpu_pool(engine, wl.store_node, page_bytes=pb,
+                                   num_pages=wl.clients * turns_pages + 8,
+                                   materialize=False),
+            disk_pool=make_disk_pool(engine, wl.store_node, page_bytes=pb,
+                                     num_pages=wl.clients * turns_pages + 8,
+                                     materialize=False),
+            page_tokens=wl.page_tokens,
+        )
+    ckpt: Optional[CheckpointEngine] = None
+    if wl.checkpoint_nbytes > 0 and wl.checkpoint_updates > 0:
+        spec = engine.topology.spec
+        ckpt = CheckpointEngine(
+            engine, nodes=spec.n_nodes, gpus_per_node=min(spec.node.n_gpus, 4),
+            source_node=wl.store_node, materialize=False)
+        ckpt.register_checkpoint({"weights": wl.checkpoint_nbytes})
+    sim = ServingSimulator(
+        engine, from_table2(), hicache=hc, checkpoint=ckpt,
+        sim_cfg=ServeSimConfig(
+            clients=wl.clients, concurrency=wl.concurrency, turns=wl.turns,
+            input_tokens=wl.input_tokens, output_tokens=wl.output_tokens,
+            mode="async", chunk_tokens=wl.chunk_tokens,
+            decode_chunk=wl.decode_chunk,
+            handoff_bytes_per_token=(
+                kv_bytes_per_token(cfg) if wl.pd_handoff else 0),
+            gpu_node=wl.gpu_node, decode_node=wl.decode_node,
+            checkpoint_updates=wl.checkpoint_updates,
+        ),
+    )
+    t0 = engine.fabric.now
+    st = sim.run()
+    extra = {
+        "input_throughput": st.input_throughput,
+        "avg_ttft_s": st.avg_ttft,
+        "p50_ttft_s": st.p50_ttft,
+        "p90_ttft_s": st.p90_ttft,
+        "p99_ttft_s": st.p99_ttft,
+        "avg_tpot_s": st.avg_tpot,
+        "p99_tpot_s": st.p99_tpot,
+        "serialized_s": st.serialized_seconds,
+        "overlap_ratio": (
+            st.serialized_seconds / st.makespan if st.makespan > 0 else 0.0),
+        "bytes_promoted": float(st.bytes_promoted),
+        "bytes_handoff": float(st.bytes_handoff),
+        "checkpoint_updates": float(st.checkpoint_updates),
+        "checkpoint_seconds": st.checkpoint_seconds,
+    }
+    for r, v in st.round_avg_ttft.items():
+        extra[f"round_avg_ttft_R{r}"] = v
+    return WorkloadOutcome(
+        completions=list(st.request_log),
+        bytes_total=st.bytes_promoted + st.bytes_handoff,
+        makespan=st.makespan,
         extra=extra,
     )
 
@@ -310,6 +395,8 @@ def run_workload(engine: TentEngine, wl: Workload) -> WorkloadOutcome:
         return run_closed_loop(engine, wl)
     if isinstance(wl, ServeWorkload):
         return run_serve(engine, wl)
+    if isinstance(wl, ServingWorkload):
+        return run_serving(engine, wl)
     if isinstance(wl, CheckpointWorkload):
         return run_checkpoint(engine, wl)
     if isinstance(wl, ClusterWorkload):

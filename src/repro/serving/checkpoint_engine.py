@@ -10,7 +10,7 @@ checkpoint format, sharding, and update schedule stay fixed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -55,7 +55,12 @@ class CheckpointEngine:
         """Stage a named-tensor table into the parameter-server host segment.
 
         Values may be arrays (bytes are staged and verifiable) or plain ints
-        (sizes only — used with materialize=False for scale simulations)."""
+        (sizes only — used with materialize=False for scale simulations).
+        Empty or zero-byte tables are rejected: a 0-byte checkpoint would
+        register 0-byte segments and post 0-byte per-rank transfers, which is
+        never what an RL weight refresh means."""
+        if not table:
+            raise ValueError("register_checkpoint: empty checkpoint table")
         blobs = []
         off = 0
         self._tensor_index = []
@@ -72,6 +77,10 @@ class CheckpointEngine:
                 assert raw is not None, "materialized checkpoints need real arrays"
                 blobs.append(raw)
             off += nbytes
+        if off == 0:
+            raise ValueError(
+                "register_checkpoint: checkpoint table is zero bytes "
+                f"({len(table)} entries, all empty)")
         # pad so every rank's shard is equal-sized
         shard = (off + self.world - 1) // self.world
         self.total_bytes = shard * self.world
@@ -99,11 +108,8 @@ class CheckpointEngine:
                 )
 
     # ------------------------------------------------------------- update
-    def update(self, *, verify: bool = False) -> UpdateResult:
-        """One in-place weight refresh: every rank pulls its shard, one
-        declarative batch, all ranks in flight concurrently."""
+    def _submit_update(self) -> int:
         assert self._src is not None, "register_checkpoint first"
-        t0 = self.engine.fabric.now
         batch = self.engine.allocate_batch()
         self.engine.submit_transfer(
             batch,
@@ -112,6 +118,33 @@ class CheckpointEngine:
                 for r, dst in enumerate(self._dst)
             ],
         )
+        return batch
+
+    def update_async(
+        self, on_done: Optional[Callable[[UpdateResult], None]] = None
+    ) -> int:
+        """Overlap-mode weight refresh: the all-rank pull is submitted and the
+        call returns immediately with the batch id, so the refresh contends
+        with whatever live traffic (decode, KV promotion) shares the fabric.
+        `on_done` fires with the `UpdateResult` when the last shard lands."""
+        t0 = self.engine.fabric.now
+        batch = self._submit_update()
+
+        def _landed(res):
+            assert res.ok, res.error
+            if on_done is not None:
+                on_done(UpdateResult(
+                    seconds=self.engine.fabric.now - t0,
+                    bytes=self.total_bytes, ranks=self.world))
+
+        self.engine.on_batch_done(batch, _landed)
+        return batch
+
+    def update(self, *, verify: bool = False) -> UpdateResult:
+        """One in-place weight refresh: every rank pulls its shard, one
+        declarative batch, all ranks in flight concurrently."""
+        t0 = self.engine.fabric.now
+        batch = self._submit_update()
         res = self.engine.wait(batch)
         assert res.ok, res.error
         secs = self.engine.fabric.now - t0

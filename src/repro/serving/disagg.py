@@ -63,19 +63,48 @@ class DisaggregatedServer:
         self._loc_d = Location(node=decode_node, kind=MemoryKind.DEVICE_HBM, device=0,
                                numa=spec.node.gpu_numa(0))
 
+    def ship_kv_async(self, data: np.ndarray, on_done=None) -> Tuple[Any, int]:
+        """Declarative KV-handoff intent: post the prefill->decode elephant
+        flow as one async TENT batch and return (dst_segment, batch_id)
+        immediately — the decode side is woken by the completion callback
+        instead of the prefill side blocking on the wire. The closed-loop
+        serving simulator and `generate(async_handoff=True)` both ride this.
+        """
+        nbytes = max(data.size, 1)
+        src = self.engine.register_segment(self._loc_p, nbytes, name="kv-src")
+        dst = self.engine.register_segment(self._loc_d, nbytes, name="kv-dst")
+        src.write(0, data)
+        batch = self.engine.allocate_batch()
+        self.engine.submit_transfer(
+            batch, [(src.segment_id, 0, dst.segment_id, 0, nbytes)])
+        if on_done is not None:
+            self.engine.on_batch_done(batch, on_done)
+        return dst, batch
+
     def generate(self, prompt: jax.Array, n_new: int, max_len: int,
-                 enc_frames: jax.Array | None = None) -> DisaggResult:
+                 enc_frames: jax.Array | None = None,
+                 *, async_handoff: bool = False) -> DisaggResult:
         B, S = prompt.shape
         # ---- prefill pool ----
         last_logits, cache = prefill(self.cfg, self.params, prompt, max_len,
                                      enc_frames=enc_frames)
         # ---- ship the cache through TENT ----
         data, _ = tree_to_bytes(cache)
-        src = self.engine.register_segment(self._loc_p, max(data.size, 1), name="kv-src")
-        dst = self.engine.register_segment(self._loc_d, max(data.size, 1), name="kv-dst")
-        src.write(0, data)
         t0 = self.engine.fabric.now
-        res = self.engine.transfer_sync(src.segment_id, 0, dst.segment_id, 0, max(data.size, 1))
+        if async_handoff:
+            # intent mode: the batch is posted and the decode worker starts
+            # when the completion callback lands (here: drain the fabric —
+            # the real decode numerics need the full cache)
+            done = {}
+            dst, _ = self.ship_kv_async(
+                data, lambda res: done.setdefault("res", res))
+            self.engine.run_until_idle()
+            res = done["res"]
+        else:
+            src = self.engine.register_segment(self._loc_p, max(data.size, 1), name="kv-src")
+            dst = self.engine.register_segment(self._loc_d, max(data.size, 1), name="kv-dst")
+            src.write(0, data)
+            res = self.engine.transfer_sync(src.segment_id, 0, dst.segment_id, 0, max(data.size, 1))
         assert res.ok, res.error
         secs = self.engine.fabric.now - t0
         cache = bytes_to_tree(dst.read(0, data.size), cache)

@@ -11,7 +11,7 @@ Table-2 ablation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,6 +36,11 @@ class CacheEntry:
     page: Page
     last_used: int
     token_count: int
+    # reference count of in-flight operations holding this entry's page (an
+    # async promotion whose bytes are still on the wire, a fetch chain being
+    # assembled): pinned entries are never eviction victims, so an overlapping
+    # demotion can never free or delete a page another request still needs.
+    pins: int = 0
 
 
 @dataclasses.dataclass
@@ -107,20 +112,24 @@ class HiCache:
         assert res.ok, res.error
         return self.engine.fabric.now - t0
 
+    def _victim(self, tier: str, pinned: frozenset) -> CacheEntry:
+        victims = [
+            e for e in self.index.values()
+            if e.tier == tier and e.key not in pinned and e.pins == 0
+        ]
+        if not victims:
+            raise RuntimeError(f"{tier} pool too small for working set")
+        return min(victims, key=lambda e: e.last_used)
+
     def _make_room(self, tier: str, pages_needed: int, pinned: frozenset = frozenset()) -> float:
         """LRU-demote entries out of `tier` until pages_needed fit. Entries in
-        `pinned` (e.g. the prefix chain being fetched) are never victims."""
+        `pinned` (e.g. the prefix chain being fetched) or with a nonzero pin
+        count are never victims."""
         pool = self.pools[tier]
         secs = 0.0
         assert pool is not None
         while pool.free_pages < pages_needed:
-            victims = [
-                e for e in self.index.values() if e.tier == tier and e.key not in pinned
-            ]
-            if not victims:
-                raise RuntimeError(f"{tier} pool too small for working set")
-            victim = min(victims, key=lambda e: e.last_used)
-            secs += self._demote(victim)
+            secs += self._demote(self._victim(tier, pinned), pinned)
         return secs
 
     def _next_tier(self, tier: str) -> Optional[str]:
@@ -130,14 +139,17 @@ class HiCache:
                 return t
         return None
 
-    def _demote(self, entry: CacheEntry) -> float:
+    def _demote(self, entry: CacheEntry, pinned: frozenset = frozenset()) -> float:
+        # `pinned` must ride along: making room in the next tier for this
+        # victim may itself evict — without the set, a nested eviction could
+        # free or delete an entry of the very chain being fetched.
         dst_tier = self._next_tier(entry.tier)
         if dst_tier is None:
             self.pools[entry.tier].free(entry.page)
             del self.index[entry.key]
             return 0.0
         dst_pool = self.pools[dst_tier]
-        secs = self._make_room(dst_tier, 1)
+        secs = self._make_room(dst_tier, 1, pinned)
         dst_page = dst_pool.alloc()
         assert dst_page is not None
         secs += self._transfer_pages([(entry.page, dst_page)])
@@ -145,6 +157,32 @@ class HiCache:
         self.pools[entry.tier].free(entry.page)
         entry.page, entry.tier = dst_page, dst_tier
         return secs
+
+    def _plan_room(
+        self, tier: str, pages_needed: int, pinned: frozenset,
+        moves: List[Tuple[Page, Page]],
+    ) -> None:
+        """Async-mode room making: select LRU victims (cascading down the
+        hierarchy), rebind their pages *now* and append the wire moves to
+        `moves` for one deferred declarative batch. All index/pool bookkeeping
+        is synchronous at submit time; only the wire time is asynchronous, so
+        overlapping requests always see a consistent cache."""
+        pool = self.pools[tier]
+        assert pool is not None
+        while pool.free_pages < pages_needed:
+            victim = self._victim(tier, pinned)
+            dst_tier = self._next_tier(tier)
+            if dst_tier is None:
+                pool.free(victim.page)
+                del self.index[victim.key]
+                continue
+            self._plan_room(dst_tier, 1, pinned, moves)
+            dst = self.pools[dst_tier].alloc()
+            assert dst is not None
+            moves.append((victim.page, dst))
+            self.bytes_demoted += victim.page.nbytes
+            pool.free(victim.page)
+            victim.page, victim.tier = dst, dst_tier
 
     # ------------------------------------------------------------- API
     def fetch_prefix(self, tokens: Sequence[int]) -> FetchResult:
@@ -192,6 +230,120 @@ class HiCache:
             transfer_seconds=secs,
             bytes_moved=nbytes,
         )
+
+    def fetch_prefix_async(
+        self, tokens: Sequence[int], on_done: Callable[[FetchResult], None]
+    ) -> None:
+        """Non-blocking `fetch_prefix`: the promotion (plus any demotions it
+        forces) is submitted as one declarative batch whose completion
+        callback delivers the `FetchResult` — the caller's virtual clock only
+        advances when the fabric does, so concurrent requests' promotions
+        genuinely overlap and contend. Cache bookkeeping (index rebinds, page
+        alloc/free) happens synchronously at submit; the chain stays pinned
+        until the bytes land."""
+        keys = self._prefix_keys(tokens)
+        chain: List[CacheEntry] = []
+        for k in keys:
+            e = self.index.get(k)
+            if e is None:
+                break
+            chain.append(e)
+        if not chain:
+            self.misses += 1
+            on_done(FetchResult(0, [], 0, 0.0, 0))
+            return
+        self.hits += 1
+        now = self._tick()
+        for e in chain:
+            e.last_used = now
+        pinned = frozenset(e.key for e in chain)
+        moves: List[Tuple[Page, Page]] = []
+        need = [e for e in chain if e.tier != "gpu"]
+        if need:
+            self._plan_room("gpu", len(need), pinned, moves)
+        for e in need:
+            dst = self.pools["gpu"].alloc()
+            assert dst is not None
+            moves.append((e.page, dst))
+            self.pools[e.tier].free(e.page)
+            e.page, e.tier = dst, "gpu"
+        nbytes = len(need) * self.page_bytes
+        self.bytes_promoted += nbytes
+        result = FetchResult(
+            prefix_tokens=len(chain) * self.page_tokens,
+            pages=[e.page for e in chain],
+            promoted_pages=len(need),
+            transfer_seconds=0.0,
+            bytes_moved=nbytes,
+        )
+        if not moves:
+            on_done(result)
+            return
+        for e in chain:
+            e.pins += 1
+        t0 = self.engine.fabric.now
+        batch = self.engine.allocate_batch()
+        self.engine.submit_transfer(
+            batch,
+            [
+                (src.pool.segment.segment_id, src.offset,
+                 dst.pool.segment.segment_id, dst.offset, src.nbytes)
+                for src, dst in moves
+            ],
+        )
+
+        def _landed(res):
+            assert res.ok, res.error
+            for e in chain:
+                e.pins -= 1
+            on_done(dataclasses.replace(
+                result, transfer_seconds=self.engine.fabric.now - t0))
+
+        self.engine.on_batch_done(batch, _landed)
+
+    def insert_async(
+        self, tokens: Sequence[int],
+        on_done: Optional[Callable[[float], None]] = None,
+    ) -> None:
+        """Non-blocking `insert`: demotions forced by making room ship as one
+        batch; new entries are indexed immediately (their KV was just computed
+        on the GPU, no wire move needed). `on_done` receives the demotion
+        transfer seconds once the evicted bytes land."""
+        keys = self._prefix_keys(tokens)
+        now = self._tick()
+        moves: List[Tuple[Page, Page]] = []
+        for k in keys:
+            if k in self.index:
+                self.index[k].last_used = now
+                continue
+            self._plan_room("gpu", 1, frozenset(), moves)
+            page = self.pools["gpu"].alloc()
+            assert page is not None
+            self.index[k] = CacheEntry(
+                key=k, tier="gpu", page=page, last_used=now,
+                token_count=self.page_tokens,
+            )
+        if not moves:
+            if on_done is not None:
+                on_done(0.0)
+            return
+        t0 = self.engine.fabric.now
+        batch = self.engine.allocate_batch()
+        self.engine.submit_transfer(
+            batch,
+            [
+                (src.pool.segment.segment_id, src.offset,
+                 dst.pool.segment.segment_id, dst.offset, src.nbytes)
+                for src, dst in moves
+            ],
+        )
+
+        def _landed(res):
+            assert res.ok, res.error
+            if on_done is not None:
+                on_done(self.engine.fabric.now - t0)
+
+        self.engine.on_batch_done(batch, _landed)
 
     def insert(self, tokens: Sequence[int], payload: Optional[np.ndarray] = None) -> float:
         """Insert KV pages for `tokens` into the GPU tier (post-prefill).

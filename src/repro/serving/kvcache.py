@@ -56,6 +56,7 @@ class PagePool:
             materialize=materialize,
         )
         self._free: List[int] = list(range(num_pages))
+        self._allocated: Dict[int, int] = {}  # slot -> page_id of the live Page
         self._next_id = 0
 
     @property
@@ -67,11 +68,25 @@ class PagePool:
             return None
         slot = self._free.pop()
         self._next_id += 1
+        self._allocated[slot] = self._next_id
         return Page(page_id=self._next_id, pool=self, offset=slot * self.page_bytes)
 
     def free(self, page: Page) -> None:
-        assert page.pool is self
-        self._free.append(page.offset // self.page_bytes)
+        """Return a page to the free list. Double-frees and foreign-pool pages
+        raise instead of silently corrupting the free list (a corrupted list
+        hands the same slot to two allocations)."""
+        if page.pool is not self:
+            raise ValueError(
+                f"page {page.page_id} belongs to {page.pool.segment.name!r}, "
+                f"not {self.segment.name!r}")
+        slot = page.offset // self.page_bytes
+        live = self._allocated.get(slot)
+        if live != page.page_id:
+            raise ValueError(
+                f"double free of slot {slot} in {self.segment.name!r} "
+                f"(page {page.page_id}, live page {live})")
+        del self._allocated[slot]
+        self._free.append(slot)
 
     # raw access used by tests / the real-compute example
     def read_page(self, page: Page) -> np.ndarray:

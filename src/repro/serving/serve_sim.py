@@ -7,18 +7,35 @@ TENT (promotions from the global CPU/disk tiers are the latency-critical
 elephant flows) and only the new suffix prefills. The transfer engine policy
 ("tent" vs "round_robin" vs others) is the only thing that changes between
 the compared configurations — exactly the paper's ablation.
+
+Two execution modes share one config and one stats schema:
+
+* mode="sync" — the original analytical loop: per-slot bookkeeping on
+  computed times, every promotion a blocking `engine.wait`. Kept as the
+  parity reference and for the legacy Table-2 comparisons.
+* mode="async" — the event-driven closed loop on the wave engine: each
+  request is a small state machine (admit -> HiCache fetch -> chunked
+  prefill -> optional prefill->decode KV handoff -> decode -> insert) whose
+  transfers are asynchronous TENT batches with completion callbacks and
+  whose compute runs on serial per-GPU resources, all on the fabric's
+  virtual clock. Concurrent requests' elephant flows genuinely overlap and
+  contend; chunked prefill interleaves with decode instead of blocking it;
+  an optional `CheckpointEngine` refresh runs overlapped with live traffic.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import TentEngine
+from ..core import Location, MemoryKind, TentEngine
+from .checkpoint_engine import CheckpointEngine
 from .hicache import HiCache
 from .perf_model import PerfModel
+
+_EVENT_BUDGET = 60_000_000
 
 
 @dataclasses.dataclass
@@ -29,6 +46,22 @@ class ServeSimConfig:
     input_tokens: int = 2048
     output_tokens: int = 128
     seed: int = 0
+    # --- closed-loop (mode="async") knobs ---
+    mode: str = "sync"  # "sync" | "async"
+    chunk_tokens: int = 0  # prefill chunk size; 0 = one monolithic chunk
+    decode_chunk: int = 32  # decode tokens per compute item
+    # prefill->decode KV handoff: > 0 ships history_tokens * this many bytes
+    # from gpu_node to decode_node through TENT after every prefill
+    handoff_bytes_per_token: int = 0
+    gpu_node: int = 0
+    decode_node: int = 1
+    # overlapped weight refresh: this many CheckpointEngine.update_async
+    # submissions spread evenly over the run (needs `checkpoint=` at init)
+    checkpoint_updates: int = 0
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"unknown serving mode {self.mode!r}")
 
 
 @dataclasses.dataclass
@@ -42,6 +75,51 @@ class ServeStats:
     total_input_tokens: int
     makespan: float
     bytes_promoted: int
+    # closed-loop extras (zeroed by the sync mode where not applicable)
+    avg_tpot: float = 0.0
+    p99_tpot: float = 0.0
+    # sum of every request's un-overlapped service time (fetch + prefill +
+    # handoff + decode): makespan strictly below this proves transfer/compute
+    # overlap across concurrent requests
+    serialized_seconds: float = 0.0
+    bytes_handoff: int = 0
+    checkpoint_updates: int = 0
+    checkpoint_seconds: float = 0.0  # summed virtual update durations
+    # (finish_time, bytes_moved, ttft) per request, admission order
+    request_log: List[Tuple[float, int, float]] = dataclasses.field(
+        default_factory=list)
+
+
+class _SerialResource:
+    """One GPU's compute engine as a FIFO resource on the virtual clock:
+    items run back to back in submission order, so a monolithic prefill
+    monopolizes the GPU while chunked prefill lets other requests' decode
+    items slot in between chunks — the continuous-batching contention the
+    closed loop exists to expose."""
+
+    def __init__(self, fabric):
+        self.fabric = fabric
+        self.busy_until = 0.0
+        self.busy_seconds = 0.0
+
+    def submit(self, duration: float, cb) -> None:
+        start = max(self.fabric.now, self.busy_until)
+        self.busy_until = start + duration
+        self.busy_seconds += duration
+        self.fabric.call_at(self.busy_until, cb)
+
+
+@dataclasses.dataclass
+class _Request:
+    client: int
+    turn: int
+    t_admit: float = 0.0
+    fetch_secs: float = 0.0
+    cached: int = 0
+    bytes_moved: int = 0
+    ttft: float = 0.0
+    decode_start: float = 0.0
+    service_secs: float = 0.0
 
 
 class ServingSimulator:
@@ -52,44 +130,97 @@ class ServingSimulator:
         *,
         hicache: Optional[HiCache],
         sim_cfg: ServeSimConfig,
+        checkpoint: Optional[CheckpointEngine] = None,
     ):
         self.engine = engine
         self.perf = perf
         self.hicache = hicache
         self.cfg = sim_cfg
+        self.checkpoint = checkpoint
 
     def run(self) -> ServeStats:
+        if self.cfg.clients <= 0 or self.cfg.turns <= 0:
+            return self._stats([], {}, 0, 0.0, [], 0.0)
+        if self.cfg.mode == "async":
+            return self._run_async()
+        return self._run_sync()
+
+    # ------------------------------------------------------------- shared
+    def _conversations(self) -> Dict[int, List[int]]:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
-        fabric = self.engine.fabric
-        # Each client's conversation is a fixed random token stream; turn k
-        # uses history[: k * input_tokens] + fresh input block.
-        convo = {
+        return {
             c: rng.integers(1, 50_000, size=cfg.turns * cfg.input_tokens).tolist()
             for c in range(cfg.clients)
         }
+
+    def _stats(
+        self,
+        ttfts: List[float],
+        per_round: Dict[int, List[float]],
+        total_input: int,
+        makespan: float,
+        tpots: List[float],
+        serialized: float,
+        *,
+        bytes_handoff: int = 0,
+        ckpt_updates: int = 0,
+        ckpt_seconds: float = 0.0,
+        request_log: Optional[List[Tuple[float, int, float]]] = None,
+    ) -> ServeStats:
+        arr = np.asarray(ttfts, dtype=float)
+        tp = np.asarray(tpots, dtype=float)
+        return ServeStats(
+            # guard: a zero-request run (clients=0) has zero makespan — the
+            # throughput is 0, not a ZeroDivisionError
+            input_throughput=total_input / makespan if makespan > 0 else 0.0,
+            avg_ttft=float(arr.mean()) if arr.size else 0.0,
+            p50_ttft=float(np.percentile(arr, 50)) if arr.size else 0.0,
+            p90_ttft=float(np.percentile(arr, 90)) if arr.size else 0.0,
+            p99_ttft=float(np.percentile(arr, 99)) if arr.size else 0.0,
+            round_avg_ttft={r: float(np.mean(v)) for r, v in per_round.items() if v},
+            total_input_tokens=total_input,
+            makespan=makespan,
+            bytes_promoted=self.hicache.bytes_promoted if self.hicache else 0,
+            avg_tpot=float(tp.mean()) if tp.size else 0.0,
+            p99_tpot=float(np.percentile(tp, 99)) if tp.size else 0.0,
+            serialized_seconds=serialized,
+            bytes_handoff=bytes_handoff,
+            checkpoint_updates=ckpt_updates,
+            checkpoint_seconds=ckpt_seconds,
+            request_log=request_log or [],
+        )
+
+    # ------------------------------------------------------------- sync
+    def _run_sync(self) -> ServeStats:
+        cfg = self.cfg
+        fabric = self.engine.fabric
+        convo = self._conversations()
         ttfts: List[float] = []
         per_round: Dict[int, List[float]] = {r: [] for r in range(1, cfg.turns + 1)}
-        # concurrency slots
+        request_log: List[Tuple[float, int, float]] = []
         slots = [0.0] * cfg.concurrency
-        # (ready_time, order, client, turn)
         work = [(0.0, c, c, 1) for c in range(cfg.clients)]
         heapq.heapify(work)
         total_input = 0
         makespan = 0.0
+        serialized = 0.0
         order = cfg.clients
         while work:
             ready, _, client, turn = heapq.heappop(work)
             si = int(np.argmin(slots))
             start = max(ready, slots[si])
-            fabric.run_until(start)
+            # the previous turn's fetch may have advanced the fabric past
+            # `start`; the virtual clock is monotonic, so clamp the target
+            fabric.run_until(max(start, fabric.now))
             history_tokens = convo[client][: turn * cfg.input_tokens]
             total_input += cfg.input_tokens
             if self.hicache is None:
-                fetch_secs, cached = 0.0, 0
+                fetch_secs, cached, moved = 0.0, 0, 0
             else:
                 res = self.hicache.fetch_prefix(history_tokens)
-                fetch_secs, cached = res.transfer_seconds, res.prefix_tokens
+                fetch_secs, cached, moved = (
+                    res.transfer_seconds, res.prefix_tokens, res.bytes_moved)
             new_tokens = len(history_tokens) - cached
             prefill_secs = self.perf.prefill_seconds(new_tokens)
             # server-side TTFT: from turn admission to first token (queue
@@ -101,20 +232,209 @@ class ServingSimulator:
                 self.hicache.insert(history_tokens)
             ttfts.append(ttft)
             per_round[turn].append(ttft)
+            request_log.append((finish, moved, ttft))
+            serialized += fetch_secs + prefill_secs + decode_secs
             slots[si] = finish
             makespan = max(makespan, finish)
             if turn < cfg.turns:
                 order += 1
                 heapq.heappush(work, (finish, order, client, turn + 1))
-        arr = np.asarray(ttfts)
-        return ServeStats(
-            input_throughput=total_input / makespan,
-            avg_ttft=float(arr.mean()),
-            p50_ttft=float(np.percentile(arr, 50)),
-            p90_ttft=float(np.percentile(arr, 90)),
-            p99_ttft=float(np.percentile(arr, 99)),
-            round_avg_ttft={r: float(np.mean(v)) for r, v in per_round.items() if v},
-            total_input_tokens=total_input,
-            makespan=makespan,
-            bytes_promoted=self.hicache.bytes_promoted if self.hicache else 0,
+        return self._stats(
+            ttfts, per_round, total_input, makespan,
+            [self.perf.tpot] * len(ttfts), serialized, request_log=request_log)
+
+    # ------------------------------------------------------------- async
+    def _run_async(self) -> ServeStats:
+        cfg = self.cfg
+        fabric = self.engine.fabric
+        convo = self._conversations()
+        t0 = fabric.now
+        prefill_gpu = _SerialResource(fabric)
+        decode_gpu = (
+            _SerialResource(fabric) if cfg.handoff_bytes_per_token > 0
+            else prefill_gpu)
+        handoff_segs = None
+        if cfg.handoff_bytes_per_token > 0:
+            spec = self.engine.topology.spec
+            max_kv = cfg.turns * cfg.input_tokens * cfg.handoff_bytes_per_token
+            src = self.engine.register_segment(
+                Location(node=cfg.gpu_node, kind=MemoryKind.DEVICE_HBM,
+                         device=0, numa=spec.node.gpu_numa(0)),
+                max_kv, name="pd-kv-src", materialize=False)
+            dst = self.engine.register_segment(
+                Location(node=cfg.decode_node, kind=MemoryKind.DEVICE_HBM,
+                         device=0, numa=spec.node.gpu_numa(0)),
+                max_kv, name="pd-kv-dst", materialize=False)
+            handoff_segs = (src.segment_id, dst.segment_id)
+
+        ttfts: List[float] = []
+        tpots: List[float] = []
+        per_round: Dict[int, List[float]] = {r: [] for r in range(1, cfg.turns + 1)}
+        request_log: List[Tuple[float, int, float]] = []
+        state = {
+            "outstanding": cfg.clients * cfg.turns,
+            "pending_ops": 0,  # fire-and-forget inserts / checkpoint pulls
+            "slots_free": cfg.concurrency,
+            "total_input": 0,
+            "serialized": 0.0,
+            "last_finish": t0,
+            "bytes_handoff": 0,
+            "finished": 0,
+            "ckpt_fired": 0,
+            "ckpt_done": 0,
+            "ckpt_seconds": 0.0,
+        }
+        queue: List[Tuple[float, int, int, int]] = []
+        order = [cfg.clients]
+        total_requests = cfg.clients * cfg.turns
+
+        def enqueue(ready: float, client: int, turn: int) -> None:
+            order[0] += 1
+            heapq.heappush(queue, (ready, order[0], client, turn))
+            fabric.call_at(ready, try_admit)
+
+        def try_admit() -> None:
+            while (state["slots_free"] > 0 and queue
+                   and queue[0][0] <= fabric.now):
+                _, _, client, turn = heapq.heappop(queue)
+                state["slots_free"] -= 1
+                start_request(_Request(client=client, turn=turn))
+
+        # -- stage 1: HiCache prefix fetch (async TENT batch) --------------
+        def start_request(req: _Request) -> None:
+            req.t_admit = fabric.now
+            state["total_input"] += cfg.input_tokens
+            history = convo[req.client][: req.turn * cfg.input_tokens]
+            if self.hicache is None:
+                fetched(req, history, 0, 0.0, 0)
+            else:
+                self.hicache.fetch_prefix_async(
+                    history,
+                    lambda res, req=req, history=history: fetched(
+                        req, history, res.prefix_tokens, res.transfer_seconds,
+                        res.bytes_moved))
+
+        # -- stage 2: chunked prefill on the (shared) compute resource ------
+        def fetched(req: _Request, history, cached, fetch_secs, moved) -> None:
+            req.cached, req.fetch_secs, req.bytes_moved = cached, fetch_secs, moved
+            req.service_secs = fetch_secs
+            new_tokens = len(history) - cached
+            chunk = cfg.chunk_tokens if cfg.chunk_tokens > 0 else max(new_tokens, 1)
+            chunks = [chunk] * (new_tokens // chunk)
+            if new_tokens % chunk:
+                chunks.append(new_tokens % chunk)
+            run_prefill(req, history, chunks)
+
+        def run_prefill(req: _Request, history, chunks: List[int]) -> None:
+            if not chunks:
+                prefilled(req, history)
+                return
+            secs = self.perf.prefill_seconds(chunks[0])
+            req.service_secs += secs
+            prefill_gpu.submit(
+                secs, lambda req=req, history=history, rest=chunks[1:]:
+                run_prefill(req, history, rest))
+
+        # -- stage 3: prefill->decode KV handoff (async TENT batch) ---------
+        def prefilled(req: _Request, history) -> None:
+            if handoff_segs is None:
+                req.ttft = fabric.now - req.t_admit
+                start_decode(req, history)
+                return
+            nbytes = max(len(history) * cfg.handoff_bytes_per_token, 1)
+            state["bytes_handoff"] += nbytes
+            t_ship = fabric.now
+            b = self.engine.allocate_batch()
+            self.engine.submit_transfer(
+                b, [(handoff_segs[0], 0, handoff_segs[1], 0, nbytes)])
+
+            def shipped(res, req=req, history=history, t_ship=t_ship):
+                assert res.ok, res.error
+                req.service_secs += fabric.now - t_ship
+                # PD mode: the first token comes from the decode worker, so
+                # TTFT includes the KV handoff
+                req.ttft = fabric.now - req.t_admit
+                start_decode(req, history)
+
+            self.engine.on_batch_done(b, shipped)
+
+        # -- stage 4: decode in chunks on the decode resource ---------------
+        def start_decode(req: _Request, history) -> None:
+            req.decode_start = fabric.now
+            req.service_secs += self.perf.decode_seconds(cfg.output_tokens)
+            run_decode(req, history, cfg.output_tokens)
+
+        def run_decode(req: _Request, history, tokens_left: int) -> None:
+            if tokens_left <= 0:
+                finish(req, history)
+                return
+            n = min(cfg.decode_chunk, tokens_left)
+            decode_gpu.submit(
+                self.perf.decode_seconds(n),
+                lambda req=req, history=history, left=tokens_left - n:
+                run_decode(req, history, left))
+
+        # -- stage 5: finish, insert, release the slot ----------------------
+        def finish(req: _Request, history) -> None:
+            now = fabric.now
+            req.ttft = req.ttft or (now - req.t_admit)
+            tpot = (now - req.decode_start) / max(cfg.output_tokens, 1)
+            ttfts.append(req.ttft)
+            tpots.append(tpot)
+            per_round[req.turn].append(req.ttft)
+            request_log.append((now, req.bytes_moved, req.ttft))
+            state["serialized"] += req.service_secs
+            state["last_finish"] = max(state["last_finish"], now)
+            state["outstanding"] -= 1
+            state["finished"] += 1
+            state["slots_free"] += 1
+            if self.hicache is not None:
+                state["pending_ops"] += 1
+
+                def inserted(_secs):
+                    state["pending_ops"] -= 1
+
+                self.hicache.insert_async(history, inserted)
+            maybe_refresh_weights()
+            if req.turn < cfg.turns:
+                enqueue(now, req.client, req.turn + 1)
+            try_admit()
+
+        # -- overlapped weight refresh --------------------------------------
+        def maybe_refresh_weights() -> None:
+            if self.checkpoint is None or cfg.checkpoint_updates <= 0:
+                return
+            due = (state["finished"] * (cfg.checkpoint_updates + 1)
+                   ) // max(total_requests, 1)
+            while state["ckpt_fired"] < min(due, cfg.checkpoint_updates):
+                state["ckpt_fired"] += 1
+                state["pending_ops"] += 1
+
+                def refreshed(res):
+                    state["ckpt_done"] += 1
+                    state["ckpt_seconds"] += res.seconds
+                    state["pending_ops"] -= 1
+
+                self.checkpoint.update_async(refreshed)
+
+        for c in range(cfg.clients):
+            enqueue(t0, c, 1)
+        try_admit()
+        guard = 0
+        while state["outstanding"] > 0 or state["pending_ops"] > 0:
+            if not fabric.step():
+                raise RuntimeError(
+                    f"serving closed loop stalled: {state['outstanding']} "
+                    f"requests and {state['pending_ops']} ops outstanding "
+                    "with an idle fabric")
+            guard += 1
+            if guard > _EVENT_BUDGET:
+                raise RuntimeError("serving closed loop exceeded event budget")
+        return self._stats(
+            ttfts, per_round, state["total_input"],
+            state["last_finish"] - t0, tpots, state["serialized"],
+            bytes_handoff=state["bytes_handoff"],
+            ckpt_updates=state["ckpt_done"],
+            ckpt_seconds=state["ckpt_seconds"],
+            request_log=request_log,
         )

@@ -1,0 +1,340 @@
+"""Event-driven serving closed loop: async/sync parity, transfer/compute
+overlap, SLO surfacing through the scenario runner, and the serving-tier
+bugfix-sweep regressions (pinned-set threading in nested eviction, PagePool
+free hardening, checkpoint-table validation, simulator clock guards)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import FabricSpec, TentEngine
+from repro.scenarios import (
+    Expectations,
+    ScenarioSpec,
+    ServingWorkload,
+    names,
+    run_scenario,
+)
+from repro.serving import (
+    CheckpointEngine,
+    HiCache,
+    ServeSimConfig,
+    ServingSimulator,
+    from_table2,
+    kv_bytes_per_token,
+    make_cpu_pool,
+    make_disk_pool,
+    make_gpu_pool,
+)
+
+
+def _hicache(engine, cfg, *, gpu_pages, cpu_pages, disk_pages=0, page_tokens=16):
+    pb = kv_bytes_per_token(cfg) * page_tokens
+    return HiCache(
+        engine,
+        cfg,
+        gpu_pool=make_gpu_pool(
+            engine, 0, 0, page_bytes=pb, num_pages=gpu_pages, materialize=False),
+        cpu_pool=make_cpu_pool(
+            engine, 1, page_bytes=pb, num_pages=cpu_pages, materialize=False),
+        disk_pool=(
+            make_disk_pool(
+                engine, 1, page_bytes=pb, num_pages=disk_pages, materialize=False)
+            if disk_pages else None),
+        page_tokens=page_tokens,
+    )
+
+
+def _seeded_cache(engine, cfg, sim_cfg, *, gpu_pages=64, cpu_pages=64):
+    """A cache already holding every client's first-turn prefix in the CPU
+    tier, so turn 1 fetches are real cross-fabric promotions."""
+    hc = _hicache(engine, cfg, gpu_pages=gpu_pages, cpu_pages=cpu_pages)
+    rng = np.random.default_rng(sim_cfg.seed)
+    for _ in range(sim_cfg.clients):
+        convo = rng.integers(
+            1, 50_000, size=sim_cfg.turns * sim_cfg.input_tokens).tolist()
+        hc.insert(convo[: sim_cfg.input_tokens])
+    for e in list(hc.index.values()):
+        hc._demote(e)
+    assert hc.tier_counts()["gpu"] == 0
+    return hc
+
+
+class TestAsyncSyncParity:
+    def test_concurrency_one_matches_sync(self):
+        """At concurrency 1 nothing can overlap, so the event-driven loop must
+        reproduce the analytical loop's numbers exactly (same promotions, same
+        TTFTs, same makespan) — the closed loop changes *scheduling*, not
+        physics."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        perf = from_table2()
+        stats = {}
+        for mode in ("sync", "async"):
+            sim_cfg = ServeSimConfig(
+                clients=2, concurrency=1, turns=2, input_tokens=32,
+                output_tokens=8, mode=mode)
+            eng = TentEngine(FabricSpec())
+            hc = _seeded_cache(eng, cfg, sim_cfg)
+            stats[mode] = ServingSimulator(
+                eng, perf, hicache=hc, sim_cfg=sim_cfg).run()
+            assert hc.bytes_promoted > 0  # the fetches really crossed the wire
+        s, a = stats["sync"], stats["async"]
+        assert a.total_input_tokens == s.total_input_tokens
+        assert a.bytes_promoted == s.bytes_promoted
+        # fp accumulation order differs (callback chains vs one running sum)
+        assert np.isclose(a.makespan, s.makespan, rtol=1e-7)
+        assert np.isclose(a.avg_ttft, s.avg_ttft, rtol=1e-7)
+        assert np.isclose(a.p99_ttft, s.p99_ttft, rtol=1e-7)
+        assert np.isclose(a.input_throughput, s.input_throughput, rtol=1e-7)
+
+
+class TestOverlap:
+    def _pd_cfg(self, concurrency, cfg):
+        return ServeSimConfig(
+            clients=4, concurrency=concurrency, turns=1, input_tokens=256,
+            output_tokens=16, mode="async", chunk_tokens=64, decode_chunk=4,
+            handoff_bytes_per_token=kv_bytes_per_token(cfg))
+
+    def test_concurrent_requests_overlap_on_the_fabric(self):
+        """With concurrency > 1 the PD handoff flows and the decode compute of
+        different requests run at the same virtual time: the makespan lands
+        strictly below the sum of un-overlapped service times, and strictly
+        below the concurrency-1 makespan of the same offered load."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        perf = from_table2()
+        mk = {}
+        for concurrency in (1, 4):
+            eng = TentEngine(FabricSpec())
+            st = ServingSimulator(
+                eng, perf, hicache=None,
+                sim_cfg=self._pd_cfg(concurrency, cfg)).run()
+            mk[concurrency] = st.makespan
+            assert st.bytes_handoff > 0
+            if concurrency > 1:
+                assert st.makespan < st.serialized_seconds
+        assert mk[4] < mk[1]
+
+    def test_serialized_seconds_bounds_concurrency_one(self):
+        # with one slot nothing overlaps: makespan ~= serialized sum
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = TentEngine(FabricSpec())
+        st = ServingSimulator(
+            eng, from_table2(), hicache=None,
+            sim_cfg=self._pd_cfg(1, cfg)).run()
+        assert np.isclose(st.makespan, st.serialized_seconds, rtol=1e-6)
+
+
+class TestCheckpointOverlapMode:
+    def test_update_async_delivers_result(self):
+        eng = TentEngine(FabricSpec())
+        ce = CheckpointEngine(eng, nodes=2, gpus_per_node=2, materialize=False)
+        ce.register_checkpoint({"w": 8 << 20})
+        got = []
+        ce.update_async(got.append)
+        assert not got  # asynchronous: nothing lands before the fabric runs
+        eng.run_until_idle()
+        assert len(got) == 1
+        assert got[0].seconds > 0
+        assert got[0].bytes == ce.total_bytes
+        assert got[0].ranks == 4
+
+    def test_serving_loop_runs_overlapped_updates(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = TentEngine(FabricSpec())
+        ce = CheckpointEngine(eng, nodes=2, gpus_per_node=2, materialize=False)
+        ce.register_checkpoint({"w": 32 << 20})
+        sim_cfg = ServeSimConfig(
+            clients=3, concurrency=2, turns=2, input_tokens=64,
+            output_tokens=8, mode="async", checkpoint_updates=2)
+        st = ServingSimulator(
+            eng, from_table2(), hicache=None, sim_cfg=sim_cfg,
+            checkpoint=ce).run()
+        assert st.checkpoint_updates == 2
+        assert st.checkpoint_seconds > 0
+
+
+class TestServingScenarios:
+    def test_library_has_serving_scenarios(self):
+        got = set(names())
+        for name in ("serving_closed_loop_flap", "serving_pd_handoff_incast",
+                     "serving_checkpoint_overlap"):
+            assert name in got
+
+    def test_workload_round_trips(self):
+        spec = ScenarioSpec(
+            name="rt", workload=ServingWorkload(clients=3, pd_handoff=True))
+        again = ScenarioSpec.from_dict(spec.to_dict())
+        assert again.workload == spec.workload
+
+    def test_slo_violations_surface_in_report(self):
+        spec = ScenarioSpec(
+            name="impossible_slo",
+            workload=ServingWorkload(
+                clients=2, concurrency=2, turns=1, input_tokens=256,
+                output_tokens=4, chunk_tokens=128, decode_chunk=4),
+            expectations=Expectations(
+                max_ttft_p99_s=1e-9, max_tpot_p99_s=1e-9),
+        )
+        rep = run_scenario(spec)
+        assert not rep.ok
+        assert any("TTFT P99" in v for v in rep.violations)
+        assert any("TPOT P99" in v for v in rep.violations)
+
+
+class TestPinnedEvictionRegression:
+    """_demote must thread the pinned set into the nested _make_room: a
+    GPU->CPU demotion that itself evicts from the CPU tier could otherwise
+    delete a page of the very chain being fetched (then double-free it when
+    the fetch rebinds)."""
+
+    def _setup(self, cpu_pages):
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = TentEngine(FabricSpec())
+        hc = _hicache(eng, cfg, gpu_pages=2, cpu_pages=cpu_pages)
+        chain = list(range(32))  # 2 pages
+        hc.insert(chain)
+        for e in list(hc.index.values()):
+            hc._demote(e)  # chain now lives on the CPU tier
+        hc.insert(list(range(1000, 1032)))  # fills the GPU tier
+        return hc, chain
+
+    def test_nested_eviction_cascades_without_touching_the_chain(self):
+        # CPU has one spare page: promoting the chain forces GPU->CPU
+        # demotions whose nested CPU evictions must pick the *other* resident
+        hc, chain = self._setup(cpu_pages=3)
+        keys = set(hc._prefix_keys(chain))
+        res = hc.fetch_prefix(chain)
+        assert res.promoted_pages == 2
+        assert all(k in hc.index and hc.index[k].tier == "gpu" for k in keys)
+
+    def test_full_cpu_tier_refuses_rather_than_evicting_the_chain(self):
+        # CPU holds only the pinned chain: the nested eviction has no legal
+        # victim and must fail loudly instead of deleting a chain entry
+        hc, chain = self._setup(cpu_pages=2)
+        keys = set(hc._prefix_keys(chain))
+        with pytest.raises(RuntimeError, match="too small"):
+            hc.fetch_prefix(chain)
+        # the chain survived intact — nothing was freed or rebound
+        assert all(k in hc.index and hc.index[k].tier == "cpu" for k in keys)
+
+    def test_async_fetch_pins_chain_until_bytes_land(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        eng = TentEngine(FabricSpec())
+        hc = _hicache(eng, cfg, gpu_pages=4, cpu_pages=4)
+        chain = list(range(32))
+        hc.insert(chain)
+        for e in list(hc.index.values()):
+            hc._demote(e)
+        done = []
+        hc.fetch_prefix_async(chain, done.append)
+        assert not done  # promotion still on the wire
+        entries = [hc.index[k] for k in hc._prefix_keys(chain)]
+        assert all(e.pins == 1 for e in entries)
+        with pytest.raises(RuntimeError, match="too small"):
+            hc._victim("gpu", frozenset())  # pinned entries are not victims
+        eng.run_until_idle()
+        assert done and done[0].promoted_pages == 2
+        assert done[0].transfer_seconds > 0
+        assert all(e.pins == 0 for e in entries)
+
+
+class TestPagePoolHardening:
+    def _pool(self):
+        eng = TentEngine(FabricSpec())
+        cfg = get_smoke_config("qwen2-0.5b")
+        pb = kv_bytes_per_token(cfg) * 16
+        a = make_gpu_pool(eng, 0, 0, page_bytes=pb, num_pages=4,
+                          materialize=False)
+        b = make_cpu_pool(eng, 1, page_bytes=pb, num_pages=4,
+                          materialize=False)
+        return a, b
+
+    def test_double_free_raises(self):
+        pool, _ = self._pool()
+        page = pool.alloc()
+        pool.free(page)
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(page)
+
+    def test_stale_free_after_slot_reuse_raises(self):
+        pool, _ = self._pool()
+        old = pool.alloc()
+        pool.free(old)
+        fresh = pool.alloc()  # reuses the slot under a new page id
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(old)
+        pool.free(fresh)  # the live page still frees cleanly
+
+    def test_foreign_page_raises(self):
+        pool_a, pool_b = self._pool()
+        page = pool_a.alloc()
+        with pytest.raises(ValueError, match="belongs to"):
+            pool_b.free(page)
+        pool_a.free(page)  # unharmed
+
+    def test_free_then_realloc_cycles(self):
+        pool, _ = self._pool()
+        for _ in range(3):
+            pages = [pool.alloc() for _ in range(4)]
+            assert pool.alloc() is None  # exhausted
+            for p in pages:
+                pool.free(p)
+        assert pool.free_pages == 4
+
+
+class TestCheckpointRegistration:
+    def test_empty_table_rejected(self):
+        eng = TentEngine(FabricSpec())
+        ce = CheckpointEngine(eng, nodes=1, gpus_per_node=2, materialize=False)
+        with pytest.raises(ValueError, match="empty checkpoint table"):
+            ce.register_checkpoint({})
+
+    def test_zero_byte_table_rejected(self):
+        eng = TentEngine(FabricSpec())
+        ce = CheckpointEngine(eng, nodes=1, gpus_per_node=2)
+        with pytest.raises(ValueError, match="zero bytes"):
+            ce.register_checkpoint({
+                "a": np.zeros(0, np.uint8), "b": np.zeros(0, np.float32)})
+
+    def test_zero_byte_entry_among_real_ones_is_fine(self):
+        eng = TentEngine(FabricSpec())
+        ce = CheckpointEngine(eng, nodes=1, gpus_per_node=2)
+        ce.register_checkpoint({
+            "empty": np.zeros(0, np.uint8),
+            "w": np.arange(1 << 16, dtype=np.uint8),
+        })
+        res = ce.update(verify=True)
+        assert res.seconds > 0
+        assert res.bytes >= 1 << 16
+
+
+class TestSimulatorGuards:
+    @pytest.mark.parametrize("mode", ["sync", "async"])
+    @pytest.mark.parametrize("clients,turns", [(0, 3), (3, 0)])
+    def test_empty_run_returns_zeroed_stats(self, mode, clients, turns):
+        eng = TentEngine(FabricSpec())
+        st = ServingSimulator(
+            eng, from_table2(), hicache=None,
+            sim_cfg=ServeSimConfig(clients=clients, turns=turns, mode=mode),
+        ).run()
+        assert st.input_throughput == 0.0
+        assert st.makespan == 0.0
+        assert st.total_input_tokens == 0
+        assert st.request_log == []
+
+    def test_sync_clock_stays_monotone_under_slow_fetches(self):
+        """Promotion transfers advance the fabric past later slots' computed
+        start times; the sim must clamp instead of asking the virtual clock to
+        run backwards."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        sim_cfg = ServeSimConfig(
+            clients=3, concurrency=2, turns=2, input_tokens=32,
+            output_tokens=4, mode="sync")
+        eng = TentEngine(FabricSpec())
+        hc = _seeded_cache(eng, cfg, sim_cfg, gpu_pages=6, cpu_pages=16)
+        st = ServingSimulator(eng, from_table2(), hicache=hc,
+                              sim_cfg=sim_cfg).run()
+        assert len(st.request_log) == 6
+        assert st.makespan > 0
+        assert all(t >= 0 for t, _, _ in st.request_log)
