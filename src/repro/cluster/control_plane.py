@@ -42,6 +42,7 @@ import dataclasses
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 from ..core.engine import EngineConfig, TentEngine
+from ..obs import events as OBS
 from ..core.fabric import Fabric
 from ..core.topology import FabricSpec, Topology
 from .diffusion import GlobalLoadTable
@@ -121,6 +122,9 @@ class TentCluster:
         self.departed: Dict[str, TentEngine] = {}
         self.joins = 0
         self.leaves = 0
+        # flight recorder (repro.obs); attach_recorder fans it out to the
+        # fabric, every engine (joiners included), and the membership layer
+        self._rec = None
         self._node_owner: Dict[int, str] = {}
         for role in self.roles:
             self.engines[role.name] = self._build_engine(role)
@@ -152,6 +156,34 @@ class TentCluster:
             )
             # anti-entropy reconciliation rides the telemetry cadence
             self.diffusion.on_round = self.membership.run_anti_entropy
+
+    def attach_recorder(self, rec) -> None:
+        """Attach one shared `repro.obs.FlightRecorder` to every layer of
+        the cluster: fabric fault events, each engine's scheduling and
+        health events, and the membership gossip. Engines joining later are
+        attached automatically in `add_engine`."""
+        self._rec = rec
+        self.fabric.attach_recorder(rec)
+        for engine in self._all_engines().values():
+            engine.attach_recorder(rec)
+        if self.membership is not None:
+            self.membership.attach_recorder(rec)
+
+    def register_metrics(self, reg) -> None:
+        """Expose the cluster's control-plane and scheduling counters on a
+        `repro.obs.MetricsRegistry` as one lazy gauge group (a single
+        `counters()` snapshot per collection)."""
+        def _collect() -> Dict[str, float]:
+            c = self.counters()
+            out = {"engines": float(len(self.engines))}
+            for key in ("diffusion_rounds", "rumors_sent", "rumors_applied",
+                        "gossip_msgs", "gossip_dropped",
+                        "anti_entropy_repairs", "engines_joined",
+                        "engines_left", "slices_issued", "waves",
+                        "completions_drained", "completion_batches"):
+                out[key] = float(c[key])
+            return out
+        reg.gauge_group(_collect)
 
     def _build_engine(self, role: EngineRole) -> TentEngine:
         omega = self.params.global_weight if self.params.diffusion else 0.0
@@ -215,6 +247,10 @@ class TentCluster:
         if self.membership is not None:
             self.membership.join(name, engine)
         self.joins += 1
+        if self._rec is not None:
+            engine.attach_recorder(self._rec)
+            self._rec.append(OBS.ENGINE_JOIN, self.fabric.now, {
+                "engine": name, "nodes": list(role.nodes)})
         return engine
 
     def remove_engine(self, name: str) -> TentEngine:
@@ -239,6 +275,9 @@ class TentCluster:
         # the leaver forgets the cluster too: its diffused view is void
         engine.store.clear_global()
         self.leaves += 1
+        if self._rec is not None:
+            self._rec.append(OBS.ENGINE_LEAVE, self.fabric.now,
+                             {"engine": name})
         return engine
 
     # ------------------------------------------------------------------ access

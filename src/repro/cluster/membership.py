@@ -50,6 +50,7 @@ from __future__ import annotations
 import itertools
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
+from ..obs import events as OBS
 from .gossip import GossipChannel, PeerSampler
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
@@ -84,6 +85,8 @@ class ClusterMembership:
         self.anti_entropy_repairs = 0
         self.joins = 0
         self.leaves = 0
+        # flight recorder (repro.obs); None = tracing off
+        self._rec = None
         # Open rumors: link -> virtual time the exclusion rumor went out.
         # Closed by any probe-verified readmission (blind periodic resets
         # never gossip), and refreshable after `rumor_refresh` so a rumor
@@ -97,6 +100,9 @@ class ClusterMembership:
         self._state: Dict[str, Dict[int, Record]] = {}
         for name, e in engines.items():
             self._enroll(name, e)
+
+    def attach_recorder(self, rec) -> None:
+        self._rec = rec
 
     def members(self) -> List[str]:
         return sorted(self._state)
@@ -143,11 +149,20 @@ class ClusterMembership:
             replica = self._state.get(origin)
             if replica is not None:
                 replica[link_id] = (version, exclude)
-            for peer in self.sampler.view(origin):
+            # view() may sample (fanout-k partial views use seeded RNG), so
+            # it must be called exactly once per rumor — the recorder reads
+            # the same materialized list the send loop walks
+            peers = list(self.sampler.view(origin))
+            for peer in peers:
                 self.channel.send(
                     lambda peer=peer: self._receive(peer, link_id, version, exclude),
                     extra_delay=self.gossip_delay,
                 )
+            rec = self._rec
+            if rec is not None:
+                rec.append(OBS.RUMOR_SENT, self.fabric.now, {
+                    "engine": origin, "link": link_id, "version": version,
+                    "exclude": exclude, "peers": len(peers)})
 
         return fire
 
@@ -166,6 +181,11 @@ class ClusterMembership:
         engine = self.engines.get(peer)
         if engine is not None and engine.health.apply_remote(link_id, excluded=exclude):
             self.rumors_applied += 1
+            rec = self._rec
+            if rec is not None:
+                rec.append(OBS.RUMOR_RECV, self.fabric.now, {
+                    "engine": peer, "link": link_id, "version": version,
+                    "exclude": exclude})
         return True
 
     # ------------------------------------------------------------- anti-entropy
@@ -177,6 +197,10 @@ class ClusterMembership:
         delay, partial views, or after a join it is what closes the gaps.
         Digests ride with the same `gossip_delay` as direct rumors, so a
         digest can never outrun the rumor it repairs."""
+        rec = self._rec
+        if rec is not None:
+            rec.append(OBS.ANTI_ENTROPY, self.fabric.now,
+                       {"members": len(self._state)})
         for name in list(self._state):
             replica = self._state.get(name)
             if not replica:

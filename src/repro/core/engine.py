@@ -15,6 +15,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import events as OBS
 from .fabric import Fabric
 from .plan import Orchestrator, Stage, StageCandidates, TransportPlan, build_stage_candidates
 from .resilience import HealthConfig, HealthMonitor
@@ -222,6 +223,11 @@ class TentEngine:
         self.waves = 0
         self.completions_drained = 0
         self.completion_batches = 0
+        # flight recorder (repro.obs): None = tracing off. Every record site
+        # is one `self._rec` load and an `is not None` branch per *batch*
+        # (wave / drain run / declared intent), never per slice — the
+        # zero-cost-when-off contract the hot-path bench gates pin.
+        self._rec = None
         if self.config.wave_complete:
             self.fabric.register_completion_sink(
                 self._on_wire_done, self._on_wire_done_many)
@@ -237,6 +243,28 @@ class TentEngine:
                 store=self.store,
             )
         return make_policy(cfg.policy)
+
+    def attach_recorder(self, rec) -> None:
+        """Attach a `repro.obs.FlightRecorder` to this engine, its fabric,
+        and its health monitor. Recording is strictly passive — appends
+        inside existing callbacks, batch-granular — and never schedules
+        fabric events, so attaching cannot perturb the simulation (pinned by
+        the tracing-ON/OFF report-parity tests)."""
+        self._rec = rec
+        self.fabric.attach_recorder(rec)
+        self.health.attach_recorder(rec, self.fabric, owner=self.name)
+
+    def register_metrics(self, reg) -> None:
+        """Expose the engine's scheduling counters as lazy gauges on a
+        `repro.obs.MetricsRegistry`. The counters stay plain int attributes
+        (the hot path keeps its bare `+= 1`); the registry reads them at
+        `collect()` time."""
+        reg.gauge("slices_issued", lambda: float(self.slices_issued))
+        reg.gauge("waves", lambda: float(self.waves))
+        reg.gauge("completions_drained",
+                  lambda: float(self.completions_drained))
+        reg.gauge("completion_batches",
+                  lambda: float(self.completion_batches))
 
     # ------------------------------------------------------------------ API
     def register_segment(self, location: Location, length: int, **kw) -> Segment:
@@ -273,6 +301,7 @@ class TentEngine:
             bc.submitted_at = self.fabric.now
             self._open_work += 1
             self._arm_reset_timer()
+        n_before = len(bc.transfers)
         for (src, soff, dst, doff, length) in transfers:
             req = TransferRequest(
                 transfer_id=next_transfer_id(),
@@ -298,6 +327,14 @@ class TentEngine:
             for sl in slices:
                 sl.submitted_at = self.fabric.now
                 self._pending.append((sl, tcb))
+        rec = self._rec
+        if rec is not None:
+            new = bc.transfers[n_before:]
+            rec.append(OBS.INTENT, self.fabric.now, {
+                "engine": self.name, "batch": rec.bid(batch_id),
+                "transfers": len(new),
+                "slices": sum(t.remaining for t in new),
+                "bytes": sum(t.req.length for t in new)})
         self._dispatch()
 
     def on_batch_done(self, batch_id: int, fn: Callable[[BatchResult], None]) -> None:
@@ -445,7 +482,23 @@ class TentEngine:
             if self._wave_policy and len(run) >= self._wave_min:
                 lengths = np.fromiter(
                     (s.length for s, _ in run), dtype=np.int64, count=len(run))
+                rec = self._rec
+                # decision provenance: snapshot the chooser's inputs *before*
+                # the line-11 charges mutate the queue array (one dict of
+                # fresh arrays per wave, nothing per slice)
+                prov = self.policy.wave_inputs(sc) if rec is not None else None
                 choices, queued_at = self.policy.choose_wave(sc, lengths)
+                if rec is not None:
+                    # slice refs, not ids: interning is deferred to the
+                    # recorder's first read so the timed path stays O(1)
+                    # dict-free per slice
+                    rec.append(OBS.WAVE, self.fabric.now, {
+                        "engine": self.name,
+                        "slices": [s for s, _ in run],
+                        "lengths": lengths,
+                        "choices": choices,
+                        "queued_at": queued_at,
+                        "inputs": prov})
                 if choices[-1] < 0:
                     # first infeasible slice ends the kernel's run: post what
                     # was scheduled, hand the bad slice to the scalar
@@ -570,6 +623,11 @@ class TentEngine:
             # No candidates on this backend: substitute the whole transport.
             if tcb.plan.substitute():
                 self.backend_substitutions += 1
+                rec = self._rec
+                if rec is not None:
+                    rec.append(OBS.SUBSTITUTE, self.fabric.now, {
+                        "engine": self.name, "slice": sl,
+                        "batch": rec.bid(tcb.batch_id)})
                 sl.hop = 0
                 self._issue(sl, tcb, retry_exclude=())
                 return
@@ -599,6 +657,14 @@ class TentEngine:
             # receiver-side accounting: published to the cluster's global
             # load table so peer engines see the incast forming (§4.2)
             self.store.charge_remote(remote_link, sl.length)
+        rec = self._rec
+        if rec is not None:
+            rec.append(OBS.POST, now, {
+                "engine": self.name, "slice": sl,
+                "link": path.local.link_id,
+                "remote": remote_link if remote_link is not None else -1,
+                "hop": sl.hop, "attempt": sl.attempts,
+                "t_pred": t_pred, "queued": queued_at_schedule})
         buf = self._post_buffer
         if buf is not None:
             # batched failure drain: defer the post into the drain's single
@@ -649,6 +715,16 @@ class TentEngine:
         if tl.excluded:
             self._arm_probe_timer()  # implicit exclusion -> start probing
         route = tcb.plan.current
+        rec = self._rec
+        if rec is not None:
+            rec.append(OBS.COMPLETE, t_end, {
+                "engine": self.name,
+                "slices": [sl],
+                "links": (inf.path.local.link_id,),
+                "scheduled": (inf.scheduled_at,),
+                "t_pred": (inf.t_pred,),
+                "lengths": (sl.length,),
+                "hop": sl.hop})
         if sl.hop + 1 < len(route.stages):
             sl.hop += 1
             self._issue(sl, tcb, retry_exclude=())  # pipelined staged hop
@@ -657,6 +733,14 @@ class TentEngine:
 
     def _handle_wire_failure(self, inf: _InflightSlice, t_end: float) -> None:
         sl, tcb, tl = inf.sl, inf.tcb, self.store.get(inf.path.local.link_id)
+        rec = self._rec
+        if rec is not None:
+            rec.append(OBS.FAIL, t_end, {
+                "engine": self.name, "slice": sl,
+                "link": inf.path.local.link_id,
+                "remote": (inf.path.remote.link_id
+                           if inf.path.remote is not None else -1),
+                "attempt": sl.attempts})
         tl.on_cancel(sl.length)
         self.health.on_path_failure(
             inf.path.local.link_id,
@@ -673,6 +757,10 @@ class TentEngine:
                 self._issue(sl, tcb, retry_exclude=())
             elif tcb.plan.substitute():
                 self.backend_substitutions += 1
+                if rec is not None:
+                    rec.append(OBS.SUBSTITUTE, t_end, {
+                        "engine": self.name, "slice": sl,
+                        "batch": rec.bid(tcb.batch_id)})
                 sl.hop = 0
                 sl.attempts = 0
                 self._issue(sl, tcb, retry_exclude=())
@@ -805,6 +893,17 @@ class TentEngine:
         t_pred = np.asarray(pred_c, dtype=np.float64)
         if self.health.observe_many(slots, links_c, t_obs, t_pred):
             self._arm_probe_timer()
+        rec = self._rec
+        if rec is not None:
+            # one append for the whole drain run — the batched-drain analogue
+            # of the scalar handler's single-slice COMPLETE
+            rec.append(OBS.COMPLETE, now, {
+                "engine": self.name,
+                "slices": [inf.sl for inf in infs],
+                "links": links_c,
+                "scheduled": sched_c,
+                "t_pred": pred_c,
+                "lengths": len_c})
         # one shared finish body with the scalar drain — any future
         # completion side effect lands in both drains by construction
         finish = self._finish_slice
@@ -875,6 +974,11 @@ class TentEngine:
         if bc.callbacks:
             self._cb_batches -= 1
         self.transfer_records.append(self._result(bc))
+        rec = self._rec
+        if rec is not None:
+            rec.append(OBS.BATCH_DONE, t_end, {
+                "engine": self.name, "batch": rec.bid(bc.batch_id),
+                "bytes": bc.bytes_total})
         for cb in bc.callbacks:
             cb(bc)
 
@@ -897,6 +1001,11 @@ class TentEngine:
                 bc.state = BatchState.FAILED
                 bc.error = code
                 bc.completed_at = self.fabric.now
+                rec = self._rec
+                if rec is not None:
+                    rec.append(OBS.BATCH_FAIL, bc.completed_at, {
+                        "engine": self.name, "batch": rec.bid(bc.batch_id),
+                        "error": code})
                 self._open_work -= 1
                 if bc.callbacks:
                     self._cb_batches -= 1

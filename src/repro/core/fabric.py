@@ -18,6 +18,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import events as OBS
 from .topology import LinkDesc, Topology
 
 # completion callback: (ok, start_time, end_time, error_code) — or, for
@@ -121,10 +122,16 @@ class Fabric:
         self._seq = itertools.count()
         self._rng = np.random.default_rng(seed)
         self._completion_sinks: Dict[object, CompletionSink] = {}
+        # flight recorder (repro.obs); None = tracing off. Fabric-side
+        # recording is passive (fault events only) and never touches the heap.
+        self._rec = None
         self.links: Dict[int, LinkState] = {
             l.link_id: LinkState(l, jitter, np.random.default_rng(seed * 7919 + l.link_id))
             for l in topology.links
         }
+
+    def attach_recorder(self, rec) -> None:
+        self._rec = rec
 
     # -- event loop ----------------------------------------------------------
     def call_at(self, t: float, fn: Callable[[], None]) -> None:
@@ -197,11 +204,25 @@ class Fabric:
         wins = self.links[link_id].degrade_windows
         wins.append(_DegradeWindow(at, until, factor))
         wins.sort(key=lambda w: w.start)
+        rec = self._rec
+        if rec is not None:
+            # degradations install no heap event (links consult their windows
+            # lazily), so record at schedule time with the window's own ts
+            rec.append(OBS.DEGRADE, at, {
+                "link": link_id, "until": until, "factor": factor})
 
     def _on_link_fail(self, link_id: int) -> None:
         """Abort all in-flight ops on the failed link (paper §2.3: a flapping
         NIC stops accepting work requests; in-flight transfers abort)."""
         link = self.links[link_id]
+        rec = self._rec
+        if rec is not None:
+            until = next((e for s, e in link.fail_windows
+                          if s <= self.now < e), -1.0)
+            rec.append(OBS.LINK_FAIL, self.now, {
+                "link": link_id, "until": until,
+                "aborted": sum(1 for op in link.outstanding.values()
+                               if not op.cancelled)})
         for op in list(link.outstanding.values()):
             if not op.cancelled:
                 op.cancelled = True

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Sequence
 
+from ..obs import events as OBS
 from .scheduler import Candidate
 from .telemetry import TelemetryStore
 
@@ -46,6 +47,16 @@ class HealthMonitor:
         # turn one engine's local observation into a cluster-wide rumor.
         self.on_exclude: Callable[[int], None] | None = None
         self.on_readmit: Callable[[int], None] | None = None
+        # flight recorder (repro.obs); attached with the owning engine's
+        # clock and name so health transitions carry virtual timestamps
+        self._rec = None
+        self._clock = None
+        self._owner = ""
+
+    def attach_recorder(self, rec, clock, *, owner: str = "") -> None:
+        self._rec = rec
+        self._clock = clock
+        self._owner = owner
 
     # -- implicit signal (paper: the telemetry loop naturally detects
     # struggling rails as predicted completion times grow) -------------------
@@ -120,6 +131,11 @@ class HealthMonitor:
         if changed:
             tl.excluded = True
             self.exclusions += 1
+            rec = self._rec
+            if rec is not None:
+                rec.append(OBS.EXCLUDE, self._clock.now, {
+                    "engine": self._owner, "link": link_id,
+                    "explicit": explicit})
         elif not explicit:
             return False
         if explicit and self.on_exclude is not None:
@@ -139,6 +155,11 @@ class HealthMonitor:
             tl.excluded = False
             tl.reset()
             self.readmissions += 1
+            rec = self._rec
+            if rec is not None:
+                rec.append(OBS.READMIT, self._clock.now, {
+                    "engine": self._owner, "link": link_id,
+                    "verified": verified})
             if verified and self.on_readmit is not None:
                 self.on_readmit(link_id)
             return True

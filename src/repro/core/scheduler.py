@@ -136,13 +136,9 @@ class TentPolicy(Policy):
         excluded = store.excluded_arr[slots]
         if sc.remote_any:
             excluded = excluded | (sc.has_remote & store.excluded_arr[sc.remote_slot_safe])
-        weight = store.global_weight
-        if weight > 0.0:
-            foreign = store._foreign_load
-            glocal = np.array([weight * foreign(lid) for lid in sc.local_links])
-            gremote = np.array(
-                [weight * foreign(lid) if lid is not None else 0.0
-                 for lid in sc.remote_links])
+        if store.global_weight > 0.0:
+            glocal = store.foreign_load_array(sc.local_links)
+            gremote = store.foreign_load_array(sc.remote_links)
         else:
             glocal = gremote = sc.zeros
         choices, queued_at, queued_out, rr = tent_choose_wave(
@@ -152,6 +148,41 @@ class TentPolicy(Policy):
         store.queued_arr[slots] = queued_out  # line 11 charges, applied
         self._rr = rr
         return choices, queued_at
+
+    def wave_inputs(self, sc) -> dict:
+        """Pre-charge snapshot of everything `choose_wave` is about to read
+        — the decision-provenance record the flight recorder (repro.obs)
+        stores with each WAVE event. Must be taken *before* `choose_wave`
+        runs (the line-11 charges mutate the queue array);
+        `repro.obs.explain.replay_wave` re-runs Algorithm 1 on this snapshot
+        and cross-checks that it reproduces the recorded choices exactly.
+        Every array is a fresh copy (fancy-index gathers / explicit copies),
+        so later simulation steps cannot retroactively rewrite history."""
+        store = self.store
+        slots = sc.local_slot
+        excluded = store.excluded_arr[slots]
+        if sc.remote_any:
+            excluded = excluded | (sc.has_remote & store.excluded_arr[sc.remote_slot_safe])
+        if store.global_weight > 0.0:
+            glocal = store.foreign_load_array(sc.local_links)
+            gremote = store.foreign_load_array(sc.remote_links)
+        else:
+            glocal = np.array(sc.zeros, dtype=np.float64)
+            gremote = np.array(sc.zeros, dtype=np.float64)
+        return {
+            "queued": store.queued_arr[slots],
+            "glocal": glocal,
+            "gremote": gremote,
+            "bandwidth": np.array(sc.bandwidth, dtype=np.float64),
+            "beta0": store.beta0_arr[slots],
+            "beta1": store.beta1_arr[slots],
+            "penalty": np.array(sc.penalty, dtype=np.float64),
+            "excluded": excluded,
+            "rr": self._rr,
+            "gamma": self.gamma,
+            "local_links": list(sc.local_links),
+            "remote_links": list(sc.remote_links),
+        }
 
 
 class RoundRobinPolicy(Policy):

@@ -278,6 +278,17 @@ class TelemetryStore:
         g = self.global_load.get(link_id, 0) - self._published.get(link_id, 0)
         return float(max(g, 0))
 
+    def foreign_load_array(self, link_ids) -> "np.ndarray":
+        """Omega-weighted foreign load for a sequence of link ids (a `None`
+        entry — a single-resource path with no remote endpoint — reads as
+        0.0). One gather shared by the wave chooser and the decision-
+        provenance snapshot (`TentPolicy.wave_inputs`), so recorded inputs
+        are produced by the very code that scored the wave."""
+        w = self.global_weight
+        foreign = self._foreign_load
+        return np.array([w * foreign(lid) if lid is not None else 0.0
+                         for lid in link_ids])
+
     # -- cross-engine accounting (repro.cluster diffusion service) -----------
     def apply_global(self, agg: Dict[int, int]) -> None:
         """Replace the diffused global-load view wholesale. The cluster's

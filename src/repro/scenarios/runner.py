@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from ..core import LinkClass, TentEngine
+from ..obs import MetricsRegistry
 from .spec import ClusterWorkload, FaultEvent, ScenarioSpec
 from .workloads import (
     WorkloadOutcome,
@@ -92,7 +93,8 @@ class ScenarioRunner:
         self.spec = spec
 
     # ------------------------------------------------------------- engine
-    def build_engine(self, policy: str) -> Tuple[TentEngine, Set[int]]:
+    def build_engine(self, policy: str,
+                     recorder=None) -> Tuple[TentEngine, Set[int]]:
         """One engine with the spec's topology, engine knobs, heterogeneity,
         fault program, and background contention installed. Returns the
         engine plus the batch ids owned by background tenants (excluded from
@@ -107,6 +109,10 @@ class ScenarioRunner:
             config=spec.engine.to_engine_config(policy),
             seed=spec.seed,
         )
+        if recorder is not None:
+            # before the environment install, so schedule-time fault records
+            # (degradation windows) land in the trace
+            engine.attach_recorder(recorder)
         self._install_environment(engine)
         tenant_batches: Set[int] = set()
         bg = spec.background
@@ -145,7 +151,7 @@ class ScenarioRunner:
                 link.link_id, at=f.at, until=f.until, factor=f.factor)
 
     # ------------------------------------------------------------- cluster
-    def build_cluster(self, policy: str):
+    def build_cluster(self, policy: str, recorder=None):
         """Materialize the `TentCluster` a ClusterWorkload describes: one
         engine per role on a shared fabric, plus the spec's faults and
         turbulence. Policy names like "tent+diffusion" enable the cluster
@@ -189,40 +195,39 @@ class ScenarioRunner:
             engine_config=spec.engine.to_engine_config(base),
             params=params, seed=spec.seed,
         )
+        if recorder is not None:
+            cluster.attach_recorder(recorder)
         self._install_environment(next(iter(cluster.engines.values())))
         return cluster
 
     # ------------------------------------------------------------- one run
-    def run_policy(self, policy: str) -> PolicyReport:
+    def run_policy(self, policy: str, *, recorder=None) -> PolicyReport:
+        """Run one policy. `recorder` optionally attaches a
+        `repro.obs.FlightRecorder` before the workload starts; attaching one
+        never changes the resulting report (parity-pinned in
+        tests/test_obs.py). All three workload kinds surface their engine/
+        cluster counters through one `MetricsRegistry` collection, so
+        `ScenarioReport.extra` carries a uniform counter surface."""
         wl = self.spec.workload
+        reg = MetricsRegistry()
         if isinstance(wl, ClusterWorkload):
-            cluster = self.build_cluster(policy)
+            cluster = self.build_cluster(policy, recorder=recorder)
             base = policy.partition("+")[0]
             churn = tuple(f for f in self.spec.faults if f.is_churn)
             outcome, ignore = run_cluster_workload(
                 cluster, wl, churn, join_policy=base)
             audit = cluster.audit(ignore=ignore)["total"]
             counters = cluster.counters()
-            extra = {
-                "engines": float(len(cluster.engines)),
-                "diffusion_rounds": float(counters.pop("diffusion_rounds")),
-                "rumors_sent": float(counters.pop("rumors_sent")),
-                "rumors_applied": float(counters.pop("rumors_applied")),
-                "gossip_msgs": float(counters.pop("gossip_msgs")),
-                "gossip_dropped": float(counters.pop("gossip_dropped")),
-                "anti_entropy_repairs": float(counters.pop("anti_entropy_repairs")),
-                "engines_joined": float(counters.pop("engines_joined")),
-                "engines_left": float(counters.pop("engines_left")),
-                "slices_issued": float(counters.pop("slices_issued")),
-                "waves": float(counters.pop("waves")),
-                "completions_drained": float(counters.pop("completions_drained")),
-                "completion_batches": float(counters.pop("completion_batches")),
-            }
+            cluster.register_metrics(reg)
             return self._reduce(
                 policy, fabric=cluster.fabric, audit=audit,
-                counters=counters, outcome=outcome, extra=extra)
-        engine, tenant_batches = self.build_engine(policy)
+                counters={k: counters[k] for k in
+                          ("retries", "exclusions", "readmissions",
+                           "substitutions")},
+                outcome=outcome, extra=reg.collect())
+        engine, tenant_batches = self.build_engine(policy, recorder=recorder)
         outcome = run_workload(engine, wl)
+        engine.register_metrics(reg)
         return self._reduce(
             policy, fabric=engine.fabric,
             audit=engine.audit(ignore=tenant_batches),
@@ -233,12 +238,7 @@ class ScenarioRunner:
                 "substitutions": engine.backend_substitutions,
             },
             outcome=outcome,
-            extra={
-                "slices_issued": float(engine.slices_issued),
-                "waves": float(engine.waves),
-                "completions_drained": float(engine.completions_drained),
-                "completion_batches": float(engine.completion_batches),
-            })
+            extra=reg.collect())
 
     def run(self) -> ScenarioReport:
         reports = {p: self.run_policy(p) for p in self.spec.policies}

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core import Location, MemoryKind, TentEngine
+from ..obs import events as OBS
 from .checkpoint_engine import CheckpointEngine
 from .hicache import HiCache
 from .perf_model import PerfModel
@@ -120,6 +121,7 @@ class _Request:
     ttft: float = 0.0
     decode_start: float = 0.0
     service_secs: float = 0.0
+    t_mark: float = 0.0  # start of the current phase (flight-recorder spans)
 
 
 class ServingSimulator:
@@ -249,6 +251,17 @@ class ServingSimulator:
         fabric = self.engine.fabric
         convo = self._conversations()
         t0 = fabric.now
+        # flight recorder (repro.obs): request phase spans ride the engine's
+        # recorder; every site below is one `is not None` guard per phase
+        rec = self.engine._rec
+        ename = self.engine.name
+
+        def mark_phase(req: _Request, phase: str, span_t0: float,
+                       **extra) -> None:
+            payload = {"engine": ename, "client": req.client,
+                       "turn": req.turn, "phase": phase, "t0": span_t0}
+            payload.update(extra)
+            rec.append(OBS.PHASE, fabric.now, payload)
         prefill_gpu = _SerialResource(fabric)
         decode_gpu = (
             _SerialResource(fabric) if cfg.handoff_bytes_per_token > 0
@@ -316,6 +329,9 @@ class ServingSimulator:
 
         # -- stage 2: chunked prefill on the (shared) compute resource ------
         def fetched(req: _Request, history, cached, fetch_secs, moved) -> None:
+            if rec is not None:
+                mark_phase(req, "fetch", req.t_admit, bytes=moved)
+            req.t_mark = fabric.now
             req.cached, req.fetch_secs, req.bytes_moved = cached, fetch_secs, moved
             req.service_secs = fetch_secs
             new_tokens = len(history) - cached
@@ -337,6 +353,8 @@ class ServingSimulator:
 
         # -- stage 3: prefill->decode KV handoff (async TENT batch) ---------
         def prefilled(req: _Request, history) -> None:
+            if rec is not None:
+                mark_phase(req, "prefill", req.t_mark)
             if handoff_segs is None:
                 req.ttft = fabric.now - req.t_admit
                 start_decode(req, history)
@@ -348,8 +366,11 @@ class ServingSimulator:
             self.engine.submit_transfer(
                 b, [(handoff_segs[0], 0, handoff_segs[1], 0, nbytes)])
 
-            def shipped(res, req=req, history=history, t_ship=t_ship):
+            def shipped(res, req=req, history=history, t_ship=t_ship,
+                        nbytes=nbytes):
                 assert res.ok, res.error
+                if rec is not None:
+                    mark_phase(req, "handoff", t_ship, bytes=nbytes)
                 req.service_secs += fabric.now - t_ship
                 # PD mode: the first token comes from the decode worker, so
                 # TTFT includes the KV handoff
@@ -378,6 +399,9 @@ class ServingSimulator:
         def finish(req: _Request, history) -> None:
             now = fabric.now
             req.ttft = req.ttft or (now - req.t_admit)
+            if rec is not None:
+                mark_phase(req, "decode", req.decode_start)
+                mark_phase(req, "request", req.t_admit, ttft=req.ttft)
             tpot = (now - req.decode_start) / max(cfg.output_tokens, 1)
             ttfts.append(req.ttft)
             tpots.append(tpot)
