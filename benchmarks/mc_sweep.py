@@ -1,0 +1,112 @@
+# Monte-Carlo fault sweeps over the fused lax.scan spray core. Emits
+# `tent-scenario-reports/v1` documents so `benchmarks.diff` can gate
+# healing-tail / throughput regressions exactly like the scalar tier.
+"""Vmapped Monte-Carlo fault sweeps (BENCH_mc.json).
+
+Each named fault scenario is compiled to a fixed-shape `SprayProgram` and
+swept over N seeds with jittered fault onset/duration/depth
+(`repro.scenarios.MonteCarloSweep`). The per-policy healing-time and
+throughput distributions (P50/P99/P99.9 with bootstrap CIs) are projected
+into `ScenarioReport` form, so the existing `benchmarks.diff
+--fail-on-regression` gate covers distribution tails too:
+
+    python -m benchmarks.mc_sweep --seeds 64 --out BENCH_mc.json
+    python -m benchmarks.mc_sweep --scenario flap_storm --seeds 256
+
+Exits non-zero if any sweep violates its declared MC expectations
+(`Expectations.healing_p999_ms` / `throughput_p50_vs_baseline`).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.scenarios import MonteCarloSweep, get
+from repro.scenarios.sweep import sweepable_names
+
+# Curated default: the closed-loop fault scenarios where jittered
+# onset/duration/depth actually moves the distribution (flaps, correlated
+# outage, degrade ramps, PD handoff under failure).
+DEFAULT_SCENARIOS = (
+    "single_rail_flap",
+    "flap_storm",
+    "correlated_outage",
+    "degrade_recover_ramp",
+    "disagg_prefill_decode",
+)
+
+
+def run_sweeps(scenarios, *, seeds: int, fault_jitter: float,
+               rounds=None, out=None) -> None:
+    violated = 0
+    docs = []
+    for name in scenarios:
+        t0 = time.time()
+        sweep = MonteCarloSweep(
+            get(name), n_seeds=seeds, fault_jitter=fault_jitter,
+            rounds=rounds)
+        report = sweep.run().to_scenario_report()
+        doc = report.to_dict()
+        doc["wall_seconds"] = round(time.time() - t0, 3)
+        docs.append(doc)
+        print(json.dumps(doc))
+        sys.stdout.flush()
+        if report.violations:
+            violated += 1
+            for v in report.violations:
+                print(f"{name}: VIOLATION: {v}", file=sys.stderr)
+    if out:
+        # Same self-describing document shape as benchmarks.run --out, so
+        # benchmarks.diff consumes BENCH_mc.json unchanged. Written even on
+        # violations: regressions belong in the trajectory too.
+        with open(out, "w") as f:
+            json.dump(
+                {
+                    "schema": "tent-scenario-reports/v1",
+                    "generated_unix": round(time.time(), 3),
+                    "scenarios": len(docs),
+                    "violated": violated,
+                    "reports": docs,
+                },
+                f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(docs)} sweep reports to {out}", file=sys.stderr)
+    if violated:
+        raise SystemExit(1)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", metavar="NAME", action="append",
+                    help="sweep one named scenario (repeatable; 'all' for "
+                         "every sweepable closed-loop scenario); default: "
+                         "the curated fault set")
+    ap.add_argument("--seeds", type=int, default=64, metavar="N",
+                    help="Monte-Carlo seeds per scenario (default 64)")
+    ap.add_argument("--fault-jitter", type=float, default=0.25, metavar="FJ",
+                    help="relative jitter on fault onset/duration/depth "
+                         "(default 0.25; 0 pins the declared schedule)")
+    ap.add_argument("--rounds", type=int, default=None, metavar="R",
+                    help="override the per-scenario spray round count")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="list sweepable scenarios and exit")
+    ap.add_argument("--out", metavar="PATH",
+                    help="write the sweep reports to PATH as one JSON "
+                         "document (bench trajectory tracking)")
+    args = ap.parse_args(argv)
+
+    if args.list_scenarios:
+        for n in sweepable_names():
+            print(f"{n:28s} {get(n).description}")
+        return
+    scenarios = list(args.scenario or DEFAULT_SCENARIOS)
+    if "all" in scenarios:
+        scenarios = list(sweepable_names())
+    run_sweeps(scenarios, seeds=args.seeds, fault_jitter=args.fault_jitter,
+               rounds=args.rounds, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

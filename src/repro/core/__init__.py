@@ -2,7 +2,16 @@
 primary contribution), plus the discrete-event fabric it executes on in this
 reproduction."""
 from .engine import BatchResult, EngineConfig, TentEngine
-from .fabric import Fabric
+from .fabric import FAR_WINDOW, Fabric
+from .jit_core import (
+    EngineJitCore,
+    SprayProgram,
+    jax_available,
+    make_draws,
+    simulate_spray_ref,
+    spray_single,
+    spray_sweep,
+)
 from .plan import (
     Orchestrator,
     RouteOption,
@@ -42,7 +51,9 @@ from .types import (
 )
 
 __all__ = [
-    "BatchResult", "EngineConfig", "TentEngine", "Fabric", "Orchestrator",
+    "BatchResult", "EngineConfig", "TentEngine", "FAR_WINDOW", "Fabric",
+    "EngineJitCore", "SprayProgram", "jax_available", "make_draws",
+    "simulate_spray_ref", "spray_single", "spray_sweep", "Orchestrator",
     "RouteOption", "Stage", "StageCandidates", "TransportPlan",
     "build_stage_candidates", "HealthConfig", "HealthMonitor",
     "Candidate", "HashPolicy", "PinnedPolicy", "Policy", "RoundRobinPolicy",

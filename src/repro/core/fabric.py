@@ -14,7 +14,7 @@ import dataclasses
 import heapq
 import itertools
 from functools import partial
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,6 +59,13 @@ class _DegradeWindow:
     start: float
     end: float
     factor: float  # effective bandwidth multiplier in (0, 1]
+
+
+# Padding sentinel for dense fault-schedule exports (`fault_window_arrays`):
+# a window opening this far in the future is never active, never overlaps a
+# transfer, and — unlike inf — survives arithmetic jitter without producing
+# NaNs (inf - inf) in the Monte Carlo sweep's window perturbation.
+FAR_WINDOW = 1e30
 
 
 class LinkState:
@@ -210,6 +217,43 @@ class Fabric:
             # lazily), so record at schedule time with the window's own ts
             rec.append(OBS.DEGRADE, at, {
                 "link": link_id, "until": until, "factor": factor})
+
+    def fault_window_arrays(self, link_ids: Optional[Sequence[int]] = None):
+        """Dense, padded export of the installed fault program — the fabric
+        hook the jitted Monte Carlo core (`repro.core.jit_core`) compiles
+        deterministic fault schedules from.
+
+        Returns a dict of float64 arrays over `link_ids` (default: all links
+        in id order): `fail_start`/`fail_end` with shape `(L, Kf)` and
+        `deg_start`/`deg_end`/`deg_factor` with shape `(L, Kd)`, where
+        `Kf`/`Kd` are the per-link maxima (at least 1). Unused rows are
+        padded with `FAR_WINDOW` starts/ends (factor 1.0), which no virtual
+        timestamp ever reaches. Snapshot semantics: call before driving the
+        clock — `is_failed`/`effective_bandwidth` prune expired windows
+        lazily, so a mid-run export only sees the remaining schedule."""
+        if link_ids is None:
+            link_ids = sorted(self.links)
+        states = [self.links[lid] for lid in link_ids]
+        kf = max(1, max((len(s.fail_windows) for s in states), default=1))
+        kd = max(1, max((len(s.degrade_windows) for s in states), default=1))
+        n = len(states)
+        out = {
+            "link_ids": np.asarray(link_ids, dtype=np.int64),
+            "fail_start": np.full((n, kf), FAR_WINDOW, dtype=np.float64),
+            "fail_end": np.full((n, kf), FAR_WINDOW, dtype=np.float64),
+            "deg_start": np.full((n, kd), FAR_WINDOW, dtype=np.float64),
+            "deg_end": np.full((n, kd), FAR_WINDOW, dtype=np.float64),
+            "deg_factor": np.ones((n, kd), dtype=np.float64),
+        }
+        for i, st in enumerate(states):
+            for k, (s, e) in enumerate(st.fail_windows):
+                out["fail_start"][i, k] = s
+                out["fail_end"][i, k] = e
+            for k, w in enumerate(st.degrade_windows):
+                out["deg_start"][i, k] = w.start
+                out["deg_end"][i, k] = w.end
+                out["deg_factor"][i, k] = w.factor
+        return out
 
     def _on_link_fail(self, link_id: int) -> None:
         """Abort all in-flight ops on the failed link (paper §2.3: a flapping

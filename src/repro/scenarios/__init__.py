@@ -2,6 +2,12 @@
 the fast regression tier alike (see README.md in this directory)."""
 from .library import SCENARIOS, get, names
 from .runner import PolicyReport, ScenarioReport, ScenarioRunner, run_scenario
+from .sweep import (
+    MonteCarloSweep,
+    SweepPolicyDist,
+    SweepReport,
+    compile_spray_program,
+)
 from .spec import (
     BackgroundSpec,
     CheckpointWorkload,
@@ -38,7 +44,9 @@ from .workloads import (
 
 __all__ = [
     "SCENARIOS", "get", "names", "PolicyReport", "ScenarioReport",
-    "ScenarioRunner", "run_scenario", "BackgroundSpec", "CheckpointWorkload",
+    "ScenarioRunner", "run_scenario", "MonteCarloSweep", "SweepPolicyDist",
+    "SweepReport", "compile_spray_program",
+    "BackgroundSpec", "CheckpointWorkload",
     "ClosedLoopWorkload", "ClusterWorkload", "EngineParams", "Expectations",
     "FaultEvent", "ScenarioSpec", "ServeWorkload", "ServingWorkload",
     "TopologyParams", "degrade_ramp", "engine_join", "engine_leave",

@@ -65,7 +65,10 @@ _register(_timeline(
     "must mask the failure, run degraded, and reintegrate the rail.",
     faults=(FaultEvent("fail", 0, 0, at=0.025, until=0.06),),
     expectations=Expectations(
-        tent_vs_baseline=1.0, max_recovery_ms=50.0, max_stall_ms=50.0),
+        tent_vs_baseline=1.0, max_recovery_ms=50.0, max_stall_ms=50.0,
+        # Monte-Carlo tails (benchmarks/mc_sweep.py, 64+ seeds, jittered
+        # onsets): measured healing P99.9 ~0.26ms, tent/rr P50 ratio ~1.18.
+        healing_p999_ms=50.0, throughput_p50_vs_baseline=1.05),
 ))
 
 _register(_timeline(
@@ -75,7 +78,9 @@ _register(_timeline(
     workload=ClosedLoopWorkload(streams=4, blocks=(1 << 20,), iters=0, duration=0.1),
     faults=flap_storm(0, 0, start=0.02, flaps=3, down=0.008, up=0.012),
     expectations=Expectations(
-        tent_vs_baseline=1.0, max_recovery_ms=50.0, max_stall_ms=50.0),
+        tent_vs_baseline=1.0, max_recovery_ms=50.0, max_stall_ms=50.0,
+        # MC tails: measured healing P99.9 ~0.46ms, tent/rr P50 ratio ~1.17.
+        healing_p999_ms=50.0, throughput_p50_vs_baseline=1.05),
 ))
 
 _register(_timeline(

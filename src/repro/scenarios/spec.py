@@ -410,6 +410,10 @@ class EngineParams:
     candidate_cache: bool = True
     wave_complete: bool = True
     wave_min: Union[int, None] = None
+    # routes the wave chooser + completion drain through the jitted
+    # fixed-shape kernels (repro.core.jit_core); bit-identical to the numpy
+    # path, scalar fallback everywhere else (see EngineConfig.jit_core)
+    jit_core: bool = False
 
     def to_engine_config(self, policy: str) -> EngineConfig:
         return EngineConfig(
@@ -423,6 +427,7 @@ class EngineParams:
             candidate_cache=self.candidate_cache,
             wave_complete=self.wave_complete,
             wave_min=self.wave_min,
+            jit_core=self.jit_core,
             health=HealthConfig(
                 probe_interval=self.probe_interval, retry_limit=self.retry_limit
             ),
@@ -466,6 +471,12 @@ class Expectations:
     max_tpot_p99_s: float = 0.0
     # no app-visible failures and no slice unaccounted for, any policy
     zero_lost_slices: bool = True
+    # Monte Carlo sweep expectations (evaluated by `repro.scenarios.sweep`
+    # over the seed distribution, not by the single-seed runner):
+    # primary healing-time P99.9 ceiling across seeds, virtual ms (0 disables)
+    healing_p999_ms: float = 0.0
+    # primary throughput P50 >= factor * every baseline's P50 (0 disables)
+    throughput_p50_vs_baseline: float = 0.0
 
     @classmethod
     def from_dict(cls, d: dict) -> "Expectations":

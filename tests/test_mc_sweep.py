@@ -1,0 +1,160 @@
+"""Monte-Carlo sweep regression tier (`repro.scenarios.sweep`).
+
+The sweep is the statistical face of the fused lax.scan spray core
+(`repro.core.jit_core`): a `ScenarioSpec` compiles once to a fixed-shape
+`SprayProgram`, gets vmapped over N seeds with jittered fault windows, and
+reports healing/throughput distributions. Everything here is pinned hard:
+the whole `SweepReport` must be byte-identical across repeat runs (same
+spec, same seed vector), every vmapped lane must equal the independently
+jitted single-seed run bit for bit, the fused simulate must equal its
+sequential numpy twin bit for bit, and declared distribution expectations
+must surface as violations — the same determinism discipline the scalar
+tiers (PRs 4-5) established, extended to the Monte-Carlo layer.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import jit_core
+from repro.scenarios import MonteCarloSweep, get
+from repro.scenarios.sweep import compile_spray_program, sweepable_names
+
+pytestmark = pytest.mark.skipif(
+    not jit_core.jax_available(), reason="the fused sweep core requires jax")
+
+FLAP = "single_rail_flap"
+
+
+@pytest.fixture(scope="module")
+def flap_sweep_64():
+    """One 64-seed sweep of the flap scenario, shared by the acceptance
+    checks (distribution shape) and the determinism checks (repeat run)."""
+    return MonteCarloSweep(get(FLAP), n_seeds=64, fault_jitter=0.25).run()
+
+
+class TestSweepDeterminism:
+    def test_repeat_run_is_byte_identical(self, flap_sweep_64):
+        """Same spec + same base seed => the serialized SweepReport cannot
+        differ in a single byte (seeds derive from fold_in(base, i), the
+        bootstrap rng from base_seed — nothing reads wall clock or global
+        rng state)."""
+        again = MonteCarloSweep(get(FLAP), n_seeds=64, fault_jitter=0.25).run()
+        assert again.to_json(sort_keys=True) == \
+            flap_sweep_64.to_json(sort_keys=True)
+
+    def test_vmapped_lanes_equal_single_seed_runs(self):
+        """Every lane of the vmapped sweep must be bit-identical to the
+        independently jitted single-seed run: vmap is a batching transform,
+        not a numerics license."""
+        sweep = MonteCarloSweep(get(FLAP), n_seeds=8, fault_jitter=0.25)
+        rep = sweep.run()
+        for policy, dist in rep.policies.items():
+            for i in range(8):
+                thr, heal_s, bytes_ok, lost, mk = sweep.run_single(
+                    i, policy=policy)
+                assert dist.throughput[i] == thr, (policy, i)
+                assert dist.makespan[i] == mk, (policy, i)
+                assert dist.bytes_ok[i] == bytes_ok, (policy, i)
+                assert dist.lost[i] == lost, (policy, i)
+                want_ms = -1.0 if heal_s < 0 else min(heal_s * 1e3,
+                                                      1e9)
+                assert dist.healing_ms[i] == want_ms, (policy, i)
+
+    @pytest.mark.parametrize("fault_jitter", [0.0, 0.25])
+    def test_fused_sim_equals_numpy_twin(self, fault_jitter):
+        """The jitted lax.scan simulate vs the sequential numpy reference,
+        identical raw draws: every output bit-equal (the fused core keeps
+        the same IEEE op order; FMA contraction is fenced off)."""
+        spec = get(FLAP)
+        p = compile_spray_program(spec)
+        for policy in ("tent", "round_robin"):
+            for seed in range(3):
+                draws = jit_core.make_draws(
+                    p, base_seed=spec.seed, seed_index=seed)
+                ref = jit_core.simulate_spray_ref(
+                    p, draws, policy=policy, fault_jitter=fault_jitter)
+                got = jit_core.spray_single(
+                    p, base_seed=spec.seed, seed_index=seed, policy=policy,
+                    fault_jitter=fault_jitter)
+                assert tuple(ref) == tuple(got), (policy, seed)
+
+
+class TestSweepDistributions:
+    def test_flap_healing_tail_is_sub_50ms_over_64_seeds(self, flap_sweep_64):
+        """The paper's resilience claim at distribution level: across 64
+        jittered flap realizations, tent's virtual healing P99.9 stays
+        under the scenario's 50 ms ceiling and no seed leaves the fault
+        unhealed."""
+        tent = flap_sweep_64.policies["tent"]
+        assert flap_sweep_64.n_seeds == 64
+        p999 = tent.summary["healing_p999_ms"]
+        assert 0.0 < p999 < 50.0
+        heal = np.asarray(tent.healing_ms)
+        assert (heal >= 0.0).all()  # every seed saw and healed the fault
+        assert (heal < 1e9).all()  # none hit the never-healed cap
+        lo, hi = (tent.summary["healing_p999_ci_lo"],
+                  tent.summary["healing_p999_ci_hi"])
+        assert lo <= p999 <= hi
+
+    def test_declared_expectations_pass_on_the_flap(self, flap_sweep_64):
+        """single_rail_flap declares MC expectations in the library
+        (healing_p999_ms, throughput_p50_vs_baseline); the measured
+        distributions must satisfy them."""
+        assert flap_sweep_64.ok, flap_sweep_64.violations
+
+    def test_violated_expectations_surface(self):
+        """An impossible healing ceiling must produce a violation (and flip
+        ok), not be silently clamped."""
+        spec = get(FLAP)
+        strict = dataclasses.replace(
+            spec, expectations=dataclasses.replace(
+                spec.expectations, healing_p999_ms=1e-6))
+        rep = MonteCarloSweep(strict, n_seeds=8, fault_jitter=0.25).run()
+        assert not rep.ok
+        assert any("healing P99.9" in v for v in rep.violations)
+
+    def test_throughput_floor_violation_surfaces(self):
+        spec = get(FLAP)
+        greedy = dataclasses.replace(
+            spec, expectations=dataclasses.replace(
+                spec.expectations, throughput_p50_vs_baseline=100.0))
+        rep = MonteCarloSweep(greedy, n_seeds=8, fault_jitter=0.25).run()
+        assert not rep.ok
+        assert any("throughput P50" in v for v in rep.violations)
+
+
+class TestSweepProjection:
+    def test_scenario_report_projection_feeds_the_diff_gate(self,
+                                                            flap_sweep_64):
+        """`to_scenario_report` must emit the fields `benchmarks.diff`
+        keys on: scenario name, primary-policy throughput, recovery/stall
+        ms, ok, and the spec's policy order."""
+        rep = flap_sweep_64.to_scenario_report()
+        doc = rep.to_dict()
+        assert doc["scenario"] == f"{FLAP}::mc"
+        assert list(doc["policies"]) == list(get(FLAP).policies)
+        tent = doc["policies"]["tent"]
+        assert tent["throughput"] == \
+            flap_sweep_64.policies["tent"].summary["throughput_p50"]
+        assert tent["recovery_ms"] == \
+            flap_sweep_64.policies["tent"].summary["healing_p50_ms"]
+        assert tent["stall_ms"] == \
+            flap_sweep_64.policies["tent"].summary["healing_p999_ms"]
+        assert doc["spec"]["mc"]["n_seeds"] == 64
+
+    def test_sweepable_names_excludes_non_closed_loop(self):
+        names = sweepable_names()
+        assert FLAP in names and "flap_storm" in names
+        for name in names:
+            compile_spray_program(get(name))  # every listed name compiles
+
+
+class TestCompileRejections:
+    def test_non_closed_loop_rejected(self):
+        from repro.scenarios import SCENARIOS
+
+        non_cl = [n for n in SCENARIOS if n not in sweepable_names()]
+        assert non_cl, "library should contain non-sweepable scenarios"
+        with pytest.raises(ValueError, match="closed-loop"):
+            compile_spray_program(get(non_cl[0]))
