@@ -2,7 +2,8 @@
 primary contribution), plus the discrete-event fabric it executes on in this
 reproduction."""
 from .engine import BatchResult, EngineConfig, TentEngine
-from .fabric import FAR_WINDOW, Fabric
+from .calqueue import CalendarQueue
+from .fabric import FAR_WINDOW, Fabric, FabricConfig
 from .jit_core import (
     EngineJitCore,
     SprayProgram,
@@ -51,7 +52,8 @@ from .types import (
 )
 
 __all__ = [
-    "BatchResult", "EngineConfig", "TentEngine", "FAR_WINDOW", "Fabric",
+    "BatchResult", "CalendarQueue", "EngineConfig", "TentEngine", "FAR_WINDOW",
+    "Fabric", "FabricConfig",
     "EngineJitCore", "SprayProgram", "jax_available", "make_draws",
     "simulate_spray_ref", "spray_single", "spray_sweep", "Orchestrator",
     "RouteOption", "Stage", "StageCandidates", "TransportPlan",

@@ -243,6 +243,36 @@ _register(ScenarioSpec(
         max_ttft_p99_s=1.5, max_tpot_p99_s=0.1),
 ))
 
+_register(ScenarioSpec(
+    "serving_production_stream",
+    "Production-scale serving stream: 10^5 single-turn requests drawn from "
+    "a seeded Poisson/Zipf mix hit the batched SoA stepper, with each cold "
+    "prefix group's KV promoted store->GPU as one per-tick cohort batch. "
+    "The byte demand runs ~1.1x the degraded fabric's cross-node capacity, "
+    "so the stream is transfer-bound: the spray policy's effective "
+    "bandwidth — not the compute model — sets the drain rate, TTFT tails, "
+    "and makespan. Four silently derated rails (mixed NIC generations) "
+    "plus brownout windows mid-run are where blind striping loses its "
+    "capacity margin.",
+    topology=TopologyParams(
+        nic_bw=2.5e7, tcp_bw=2.5e7,
+        rail_bw_factors=((4, 0.3), (5, 0.3), (6, 0.3), (7, 0.3))),
+    workload=ServingWorkload(
+        concurrency=512, input_tokens=128, output_tokens=16,
+        chunk_tokens=256, stream_requests=100_000, arrival_rate=300.0,
+        zipf_alpha=1.1, traffic_groups=512, prefix_frac=0.9375,
+        stream_kv_bytes_per_token=40_000, resident_s=2.0, tick_s=0.04),
+    engine=EngineParams(slice_bytes=4 << 20, max_slices=16,
+                        reset_interval=30.0),
+    faults=(FaultEvent("degrade", 1, 0, at=80.0, until=140.0, factor=0.1),
+            FaultEvent("degrade", 1, 1, at=180.0, until=240.0, factor=0.1)),
+    # measured (seeded, deterministic): tent 15947 tok/s vs rr 4098 (3.9x),
+    # TTFT P90 18.1s vs 47.0s, P99 36.8s, TPOT P99 0.025s
+    expectations=Expectations(
+        tent_vs_baseline=2.0, ttft_p90_vs_baseline=1.0,
+        max_ttft_p99_s=60.0, max_tpot_p99_s=0.05),
+))
+
 # -- hetero-fabric portability (Table 4 beyond RDMA/TCP) ---------------------
 
 _register(ScenarioSpec(

@@ -42,6 +42,10 @@ class TopologyParams:
     n_gpus: int = 8
     n_nics: int = 8
     nic_bw: float = 25.0e9
+    # TCP fallback rail; scaled-down scenarios must derate it alongside
+    # nic_bw or the engine simply routes the contention onto the 3 GB/s
+    # default and the NIC numbers become decorative
+    tcp_bw: float = 3.0e9
     has_nvlink: bool = True
     has_gpudirect: bool = True
     has_mnnvl: bool = False
@@ -53,6 +57,7 @@ class TopologyParams:
             n_nodes=self.n_nodes,
             node=NodeSpec(n_numa=self.n_numa, n_gpus=self.n_gpus, n_nics=self.n_nics),
             nic_bw=self.nic_bw,
+            tcp_bw=self.tcp_bw,
             has_nvlink=self.has_nvlink,
             has_gpudirect=self.has_gpudirect,
             has_mnnvl=self.has_mnnvl,
@@ -241,6 +246,20 @@ class ServingWorkload:
     gpu_node: int = 0
     store_node: int = 1
     decode_node: int = 1
+    # --- production-stream fields (> 0 selects the batched SoA stepper) ---
+    # total single-turn requests drawn from the seeded Poisson/Zipf stream
+    # (repro.scenarios.traffic); clients/turns/use_hicache are ignored —
+    # prefix caching becomes the vectorized group-residency model
+    stream_requests: int = 0
+    arrival_rate: float = 0.0  # mean arrivals/s
+    zipf_alpha: float = 1.1  # popularity skew over prefix groups
+    traffic_groups: int = 64
+    prefix_frac: float = 0.5  # cached-prefix share of each prompt
+    # KV bytes promoted per cold prefix token; pins the wire-contention
+    # level independently of the model's true KV width
+    stream_kv_bytes_per_token: int = 1024
+    resident_s: float = 1.0  # GPU residency window per prefix group
+    tick_s: float = 0.005  # batched stepper's virtual-clock tick
 
     @classmethod
     def from_dict(cls, d: dict) -> "ServingWorkload":
@@ -414,6 +433,10 @@ class EngineParams:
     # fixed-shape kernels (repro.core.jit_core); bit-identical to the numpy
     # path, scalar fallback everywhere else (see EngineConfig.jit_core)
     jit_core: bool = False
+    # runs the fabric event loop on the calendar queue (bucketed timestamp
+    # wheel) instead of the binary heap; bit-identical pop order, O(1)
+    # amortized at serving-stream scale (see EngineConfig.calendar_queue)
+    calendar_queue: bool = False
 
     def to_engine_config(self, policy: str) -> EngineConfig:
         return EngineConfig(
@@ -428,6 +451,7 @@ class EngineParams:
             wave_complete=self.wave_complete,
             wave_min=self.wave_min,
             jit_core=self.jit_core,
+            calendar_queue=self.calendar_queue,
             health=HealthConfig(
                 probe_interval=self.probe_interval, retry_limit=self.retry_limit
             ),

@@ -41,7 +41,7 @@ from ..core.jit_core import (
     spray_sweep,
 )
 from .runner import PolicyReport, ScenarioReport
-from .spec import ClosedLoopWorkload, ScenarioSpec
+from .spec import ClosedLoopWorkload, ScenarioSpec, ServingWorkload
 
 __all__ = [
     "MonteCarloSweep",
@@ -54,14 +54,17 @@ __all__ = [
 
 
 def sweepable_names() -> List[str]:
-    """Library scenarios the fused model can compile: closed-loop spray
-    without join/leave churn (staged hops, serving executors, and churn
-    stay on the event-driven `ScenarioRunner`)."""
+    """Library scenarios the fused model can compile: closed-loop spray and
+    batched serving streams, without join/leave churn (staged hops, the
+    event-driven serving executors, and churn stay on the single-seed
+    `ScenarioRunner`)."""
     from .library import SCENARIOS
 
     return [
         name for name, spec in SCENARIOS.items()
-        if isinstance(spec.workload, ClosedLoopWorkload)
+        if (isinstance(spec.workload, ClosedLoopWorkload)
+            or (isinstance(spec.workload, ServingWorkload)
+                and spec.workload.stream_requests > 0))
         and not any(f.is_churn for f in spec.faults)
     ]
 
@@ -84,16 +87,24 @@ MAX_ROUNDS = 512
 
 def compile_spray_program(spec: ScenarioSpec, *,
                           rounds: Optional[int] = None) -> SprayProgram:
-    """Lower `spec` to a `SprayProgram`. Closed-loop workloads only — the
-    sweep models the spray loop, not serving/cluster executors."""
+    """Lower `spec` to a `SprayProgram`. Closed-loop workloads and batched
+    serving streams only — the sweep models the spray loop, not the
+    event-driven serving/cluster executors."""
     from .workloads import _stream_endpoints
 
     wl = spec.workload
+    if isinstance(wl, ServingWorkload) and wl.stream_requests > 0:
+        if any(f.is_churn for f in spec.faults):
+            raise ValueError(
+                "join/leave churn cannot be compiled into a single-engine "
+                "spray program")
+        return _compile_serving_stream(spec, rounds=rounds)
     if not isinstance(wl, ClosedLoopWorkload):
         raise ValueError(
-            f"MonteCarloSweep models closed-loop spray scenarios; "
-            f"{spec.name!r} runs {type(wl).__name__} — use the event-driven "
-            "ScenarioRunner for it")
+            f"MonteCarloSweep models closed-loop spray scenarios and "
+            f"batched serving streams; {spec.name!r} runs "
+            f"{type(wl).__name__} — use the event-driven ScenarioRunner "
+            "for it")
     if any(f.is_churn for f in spec.faults):
         raise ValueError(
             "join/leave churn cannot be compiled into a single-engine "
@@ -122,6 +133,89 @@ def compile_spray_program(spec: ScenarioSpec, *,
     length = float(block) / n_slices
     wave = wl.streams * max(1, wl.batch_size) * n_slices
 
+    if rounds is None:
+        if wl.iters > 0:
+            rounds = wl.iters
+        else:
+            # duration-driven: rounds to cover the declared horizon at the
+            # aggregate nominal rate, with 20% headroom for faults
+            agg = float(np.sum(np.where(np.isfinite(sc.penalty),
+                                        sc.bandwidth, 0.0)))
+            round_time = wave * length / max(agg, 1.0)
+            rounds = int(np.clip(
+                math.ceil(wl.duration / max(round_time, 1e-9) * 1.2),
+                MIN_ROUNDS, MAX_ROUNDS))
+
+    return _finish_program(spec, engine, sc, rounds=int(rounds),
+                           wave=int(wave), length=length)
+
+
+def _compile_serving_stream(spec: ScenarioSpec, *,
+                            rounds: Optional[int] = None) -> SprayProgram:
+    """Lower a batched serving-stream scenario: the spray workload is the
+    per-tick cold-cohort promotion batches (store DRAM -> serving GPU HBM),
+    so the probe transfer is one mean-sized nonzero cohort and each round
+    models one cohort tick. Compute phases (prefill/decode) are outside the
+    fused model on purpose — they are policy-invariant, so the transfer
+    distribution is the part worth sweeping."""
+    from ..core import Location, MemoryKind
+    from .runner import ScenarioRunner
+    from .traffic import TrafficSpec, promotion_bytes
+
+    wl = spec.workload
+    engine, _ = ScenarioRunner(spec).build_engine("tent")
+    stream = TrafficSpec(
+        requests=wl.stream_requests, arrival_rate=wl.arrival_rate,
+        zipf_alpha=wl.zipf_alpha, groups=wl.traffic_groups,
+        input_tokens=wl.input_tokens, output_tokens=wl.output_tokens,
+    ).generate()
+    promo = promotion_bytes(
+        stream, prefix_frac=wl.prefix_frac,
+        kv_bytes_per_token=wl.stream_kv_bytes_per_token,
+        resident_s=wl.resident_s)
+    # the batched stepper's tick grouping: one promotion batch per tick
+    # with at least one cold request in it
+    tick_ids = np.floor(stream.arrival / wl.tick_s).astype(np.int64)
+    cohorts = np.zeros(int(tick_ids[-1]) + 1)
+    np.add.at(cohorts, tick_ids, promo)
+    nonzero = cohorts[cohorts > 0]
+    if nonzero.size == 0:
+        raise ValueError(
+            f"{spec.name!r}: the stream promotes no bytes (every prefix "
+            "group stays resident) — nothing for the sweep to model")
+    block = int(nonzero.mean())
+
+    numa = engine.topology.spec.node.gpu_numa(0)
+    src = engine.register_segment(
+        Location(node=wl.store_node, kind=MemoryKind.HOST_DRAM,
+                 device=0, numa=0),
+        block, name="sweep-probe-store", materialize=False)
+    dst = engine.register_segment(
+        Location(node=wl.gpu_node, kind=MemoryKind.DEVICE_HBM,
+                 device=0, numa=numa),
+        block, name="sweep-probe-gpu", materialize=False)
+    b = engine.allocate_batch()
+    engine.submit_transfer(
+        b, [(src.segment_id, 0, dst.segment_id, 0, block)])
+    tcb = engine._batches[b].transfers[0]
+    sc = engine._stage_cands(tcb, 0)
+    if not sc.paths:
+        raise ValueError(
+            f"{spec.name!r}: probe transfer resolved no stage-0 candidates")
+
+    n_slices = max(1, min(spec.engine.max_slices,
+                          math.ceil(block / spec.engine.slice_bytes)))
+    if rounds is None:
+        rounds = int(np.clip(nonzero.size, MIN_ROUNDS, MAX_ROUNDS))
+    return _finish_program(spec, engine, sc, rounds=int(rounds),
+                           wave=int(n_slices),
+                           length=float(block) / n_slices)
+
+
+def _finish_program(spec: ScenarioSpec, engine, sc, *, rounds: int,
+                    wave: int, length: float) -> SprayProgram:
+    """Snapshot the probe engine's candidate rails, telemetry priors, and
+    installed fault/degradation schedule into the fixed-shape program."""
     D = len(sc.paths)
     slots = sc.local_slot
     store = engine.store
@@ -163,19 +257,6 @@ def compile_spray_program(spec: ScenarioSpec, *,
             degd_start[i] = fw["deg_start"][rr]
             degd_end[i] = fw["deg_end"][rr]
             degd_factor[i] = fw["deg_factor"][rr]
-
-    if rounds is None:
-        if wl.iters > 0:
-            rounds = wl.iters
-        else:
-            # duration-driven: rounds to cover the declared horizon at the
-            # aggregate nominal rate, with 20% headroom for faults
-            agg = float(np.sum(np.where(np.isfinite(sc.penalty),
-                                        sc.bandwidth, 0.0)))
-            round_time = wave * length / max(agg, 1.0)
-            rounds = int(np.clip(
-                math.ceil(wl.duration / max(round_time, 1e-9) * 1.2),
-                MIN_ROUNDS, MAX_ROUNDS))
 
     return SprayProgram(
         n_rails=D,

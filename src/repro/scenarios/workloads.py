@@ -298,6 +298,9 @@ def run_serving(engine: TentEngine, wl: ServingWorkload) -> WorkloadOutcome:
         make_gpu_pool,
     )
 
+    if wl.stream_requests > 0:
+        return _run_serving_stream(engine, wl)
+
     cfg = get_config(wl.model)
     hc: Optional[HiCache] = None
     if wl.use_hicache:
@@ -358,6 +361,56 @@ def run_serving(engine: TentEngine, wl: ServingWorkload) -> WorkloadOutcome:
     return WorkloadOutcome(
         completions=list(st.request_log),
         bytes_total=st.bytes_promoted + st.bytes_handoff,
+        makespan=st.makespan,
+        extra=extra,
+    )
+
+
+def _run_serving_stream(engine: TentEngine, wl: ServingWorkload) -> WorkloadOutcome:
+    """Production-stream executor: the batched SoA stepper over a seeded
+    Poisson/Zipf arrival stream (`ServingSimulator(mode="batched")`). No
+    HiCache object at this scale — prefix caching is the vectorized
+    group-residency model in `repro.scenarios.traffic.promotion_bytes`."""
+    from ..serving import ServeSimConfig, ServingSimulator, from_table2
+
+    sim = ServingSimulator(
+        engine, from_table2(), hicache=None,
+        sim_cfg=ServeSimConfig(
+            mode="batched",
+            concurrency=wl.concurrency,
+            input_tokens=wl.input_tokens,
+            output_tokens=wl.output_tokens,
+            chunk_tokens=wl.chunk_tokens,
+            gpu_node=wl.gpu_node,
+            store_node=wl.store_node,
+            stream_requests=wl.stream_requests,
+            arrival_rate=wl.arrival_rate,
+            zipf_alpha=wl.zipf_alpha,
+            traffic_groups=wl.traffic_groups,
+            prefix_frac=wl.prefix_frac,
+            stream_kv_bytes_per_token=wl.stream_kv_bytes_per_token,
+            resident_s=wl.resident_s,
+            tick_s=wl.tick_s,
+        ),
+    )
+    st = sim.run()
+    extra = {
+        "input_throughput": st.input_throughput,
+        "avg_ttft_s": st.avg_ttft,
+        "p50_ttft_s": st.p50_ttft,
+        "p90_ttft_s": st.p90_ttft,
+        "p99_ttft_s": st.p99_ttft,
+        "avg_tpot_s": st.avg_tpot,
+        "p99_tpot_s": st.p99_tpot,
+        "serialized_s": st.serialized_seconds,
+        "overlap_ratio": (
+            st.serialized_seconds / st.makespan if st.makespan > 0 else 0.0),
+        "bytes_promoted": float(st.bytes_promoted),
+        "requests_completed": float(st.requests),
+    }
+    return WorkloadOutcome(
+        completions=list(st.request_log),
+        bytes_total=st.bytes_promoted,
         makespan=st.makespan,
         extra=extra,
     )

@@ -3,12 +3,14 @@ from .disagg import DisaggregatedServer, monolithic_generate
 from .hicache import FetchResult, HiCache
 from .kvcache import PagePool, kv_bytes_per_token, make_cpu_pool, make_disk_pool, make_gpu_pool
 from .perf_model import PerfModel, from_roofline, from_table2
-from .serve_sim import ServeSimConfig, ServeStats, ServingSimulator
+from .serve_sim import Request, RequestTable, ServeSimConfig, ServeStats, ServingSimulator
+from .sketch import P2Quantile, PercentileSketch
 
 __all__ = [
     "CheckpointEngine", "UpdateResult", "DisaggregatedServer",
     "monolithic_generate", "FetchResult", "HiCache", "PagePool",
     "kv_bytes_per_token", "make_cpu_pool", "make_disk_pool", "make_gpu_pool",
     "PerfModel", "from_roofline", "from_table2", "ServeSimConfig",
-    "ServeStats", "ServingSimulator",
+    "ServeStats", "ServingSimulator", "Request", "RequestTable",
+    "P2Quantile", "PercentileSketch",
 ]

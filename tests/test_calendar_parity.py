@@ -1,0 +1,215 @@
+"""Calendar-queue fabric event loop: bit-parity + ordering invariants.
+
+PR 9 puts a bucketed timestamp wheel (`repro.core.calqueue.CalendarQueue`)
+under the fabric's event loop as an O(1)-amortized alternative to the binary
+heap, toggled by `FabricConfig(event_queue="calendar")` and plumbed through
+`EngineParams.calendar_queue` — the same pure-cost-change discipline as
+wave/wave_complete/jit_core before it. These tests pin:
+
+  * byte-identical `ScenarioReport`s across the toggle for the full scenario
+    library (the spec echo of the toggle itself is the only permitted
+    difference);
+  * the wheel's ordering contract against heapq on seeded randomized
+    streams — monotonic-time pushes interleaved with pops, heavy timestamp
+    ties (ties drain in post/seq order), far-future sentinels, and adaptive
+    resize; the hypothesis twin lives in tests/test_properties.py.
+"""
+import dataclasses
+import heapq
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CalendarQueue, Fabric, FabricConfig, FabricSpec, Topology
+from repro.core.fabric import FAR_WINDOW
+from repro.scenarios import SCENARIOS, ScenarioRunner, get
+
+# the one production-scale scenario is shrunk for the double-run parity
+# sweep: the toggle's bit-parity is about event *order*, which does not
+# depend on stream size, and CI should pay seconds here, not minutes
+_SHRINK = {"serving_production_stream": 5_000}
+
+
+def _normalized_report(spec) -> str:
+    d = ScenarioRunner(spec).run().to_dict()
+    # the toggle's own spec echo is the single permitted difference
+    d["spec"]["engine"]["calendar_queue"] = None
+    return json.dumps(d, sort_keys=True)
+
+
+def _with_calendar(spec, on=True):
+    return dataclasses.replace(
+        spec, engine=dataclasses.replace(spec.engine, calendar_queue=on))
+
+
+def _sized(spec):
+    n = _SHRINK.get(spec.name)
+    if n is not None:
+        spec = dataclasses.replace(
+            spec, workload=dataclasses.replace(spec.workload, stream_requests=n))
+    return spec
+
+
+class TestCalendarFabricBitIdentity:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_reports_identical_across_queue_toggle(self, name):
+        """Heap vs calendar over the full scenario library: same pops in the
+        same order => same virtual timeline => every report metric matches
+        exactly, faults, turbulence, churn, and serving streams included."""
+        spec = _sized(get(name))
+        assert _normalized_report(_with_calendar(spec)) == \
+            _normalized_report(spec)
+
+    def test_fabric_callback_order_matches_heap(self):
+        """Direct fabric-level pin: interleaved call_at/call_after with
+        heavy timestamp ties must fire in identical order on both queues."""
+        topo = Topology(FabricSpec(n_nodes=2))
+        orders = {}
+        for cfg in (FabricConfig(), FabricConfig(event_queue="calendar")):
+            fab = Fabric(topo, seed=7, config=cfg)
+            fired = []
+            times = [0.003, 0.001, 0.002, 0.001, 0.001, 0.0025, 0.002]
+            for i, t in enumerate(times):
+                fab.call_at(t, lambda i=i: fired.append(i))
+            fab.call_after(0.001, lambda: fired.append("after"))
+            # a callback scheduling more work mid-drain, landing on a tie
+            fab.call_at(0.002, lambda: fab.call_at(
+                0.0025, lambda: fired.append("nested")))
+            fab.run_until(0.01)
+            orders[cfg.event_queue] = fired
+        assert orders["calendar"] == orders["heap"]
+        assert len(orders["heap"]) == 9
+
+
+class TestCalendarQueueOrdering:
+    """The wheel against heapq: exact (time, seq) pop order."""
+
+    def _entries(self, rng, n, *, tie_frac=0.0, far_frac=0.0, span=1.0):
+        times = rng.uniform(0.0, span, size=n)
+        if tie_frac:
+            # collapse a fraction onto a handful of shared timestamps
+            ties = rng.random(n) < tie_frac
+            pool = rng.uniform(0.0, span, size=max(1, n // 16))
+            times[ties] = rng.choice(pool, size=int(ties.sum()))
+        if far_frac:
+            far = rng.random(n) < far_frac
+            times[far] = FAR_WINDOW
+        return [(float(t), i, f"item{i}") for i, t in enumerate(times)]
+
+    @pytest.mark.parametrize("width,threshold", [
+        (1e-3, 4096), (1e-6, 8), (1.0, 64)])
+    def test_bulk_drain_matches_heapq_seeded(self, width, threshold):
+        rng = np.random.default_rng(101)
+        for trial in range(40):
+            n = int(rng.integers(1, 400))
+            entries = self._entries(
+                rng, n, tie_frac=float(rng.choice([0.0, 0.5, 0.95])),
+                far_frac=float(rng.choice([0.0, 0.1])),
+                span=float(rng.choice([1e-4, 1.0, 1e4])))
+            cal = CalendarQueue(width)
+            cal.resize_threshold = threshold
+            heap = []
+            for e in entries:
+                cal.push(e)
+                heapq.heappush(heap, e)
+            got = [cal.pop() for _ in range(n)]
+            want = [heapq.heappop(heap) for _ in range(n)]
+            assert got == want, f"trial {trial}"
+            assert len(cal) == 0
+
+    def test_interleaved_monotonic_push_pop_matches_heapq(self):
+        """The fabric's actual access pattern: the clock only moves forward,
+        so new work is posted at times >= the last pop (plus jittered
+        service ends slightly beyond it), interleaved with drains."""
+        rng = np.random.default_rng(202)
+        for trial in range(30):
+            cal = CalendarQueue(1e-3)
+            cal.resize_threshold = int(rng.choice([8, 64, 4096]))
+            heap = []
+            now, seq = 0.0, 0
+            for _ in range(int(rng.integers(10, 60))):
+                for _ in range(int(rng.integers(1, 12))):
+                    t = now + float(rng.uniform(0.0, 5e-3))
+                    e = (t, seq, seq)
+                    seq += 1
+                    cal.push(e)
+                    heapq.heappush(heap, e)
+                for _ in range(int(rng.integers(0, 10))):
+                    if not heap:
+                        break
+                    want = heapq.heappop(heap)
+                    got = cal.pop()
+                    assert got == want, f"trial {trial}"
+                    now = got[0]
+            while heap:
+                assert cal.pop() == heapq.heappop(heap)
+
+    def test_ties_drain_in_post_order(self):
+        """All entries at one timestamp: pops must come back in seq (post)
+        order — the property the engine's same-timestamp completion
+        batching and the serving stepper's cohort callbacks rely on."""
+        cal = CalendarQueue(1e-3)
+        order = list(range(500))
+        rng = np.random.default_rng(7)
+        rng.shuffle(order)
+        for seq in order:
+            cal.push((0.125, seq, f"p{seq}"))
+        assert [cal.pop()[1] for _ in range(500)] == list(range(500))
+
+    def test_push_behind_current_bucket_stays_ordered(self):
+        """peek() advances the wheel to the earliest bucket; a later push
+        landing at-or-before that bucket must join the *current* bucket's
+        heap, not a stale dict bucket the wheel already passed."""
+        cal = CalendarQueue(1e-3)
+        cal.push((0.0105, 0, "a"))
+        assert cal.peek() == (0.0105, 0, "a")  # wheel advanced to bucket 10
+        cal.push((0.0101, 1, "b"))  # same bucket, earlier time
+        cal.push((0.0052, 2, "c"))  # EARLIER bucket than current
+        assert cal.pop() == (0.0052, 2, "c")
+        assert cal.pop() == (0.0101, 1, "b")
+        assert cal.pop() == (0.0105, 0, "a")
+
+    def test_adaptive_resize_preserves_order_and_len(self):
+        """One pathological bucket (every entry in a single width window)
+        forces the width/4 rebuild; order and length must survive it."""
+        cal = CalendarQueue(1.0)
+        cal.resize_threshold = 32
+        rng = np.random.default_rng(11)
+        times = rng.uniform(0.25, 0.26, size=500)  # all in bucket 0
+        entries = sorted((float(t), i, i) for i, t in enumerate(times))
+        for e in sorted(entries, key=lambda e: e[1]):  # push in seq order
+            cal.push(e)
+        assert len(cal) == 500
+        assert [cal.pop() for _ in range(500)] == entries
+        # the rebuild fires lazily on the first drain of the fat bucket
+        assert cal.width < 1.0
+
+    def test_len_and_bool(self):
+        cal = CalendarQueue(1e-3)
+        assert not cal and len(cal) == 0
+        cal.push((0.5, 0, None))
+        assert cal and len(cal) == 1
+        cal.pop()
+        assert not cal
+
+    def test_pop_empty_raises(self):
+        with pytest.raises(IndexError):
+            CalendarQueue(1e-3).pop()
+
+
+class TestFabricConfig:
+    def test_bad_queue_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FabricConfig(event_queue="wheel-of-fortune")
+
+    def test_negative_width_rejected(self):
+        with pytest.raises(ValueError):
+            FabricConfig(event_queue="calendar", calendar_width=-1.0)
+
+    def test_default_is_heap(self):
+        topo = Topology(FabricSpec())
+        assert Fabric(topo, seed=0)._cal is None
+        assert Fabric(topo, seed=0,
+                      config=FabricConfig(event_queue="calendar"))._cal \
+            is not None

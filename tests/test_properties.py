@@ -547,3 +547,73 @@ class TestJitCoreKernelParity:
             program, base_seed=spec.seed, seed_index=seed_index,
             policy=policy, fault_jitter=fault_jitter)
         assert tuple(ref) == tuple(got)
+
+
+class TestCalendarQueueOrdering:
+    """Hypothesis twin of the seeded sweep in tests/test_calendar_parity.py:
+    the bucketed timestamp wheel must pop in exact `heapq` order — the
+    bit-parity contract the calendar-queue fabric event loop rests on."""
+
+    @given(
+        times=st.lists(
+            st.floats(0.0, 1e6, allow_nan=False, allow_infinity=False),
+            min_size=1, max_size=200),
+        width=st.sampled_from([1e-6, 1e-3, 1.0]),
+        threshold=st.sampled_from([4, 64, 4096]),
+        tie_every=st.integers(1, 8),
+    )
+    @settings(max_examples=150, deadline=None)
+    def test_pop_order_matches_heapq(self, times, width, threshold, tie_every):
+        import heapq
+
+        from repro.core import CalendarQueue
+
+        # force timestamp collisions: every tie_every-th entry reuses the
+        # previous time, exercising the in-bucket (time, seq) tie break
+        entries = []
+        for i, t in enumerate(times):
+            if i % tie_every == 0 and entries:
+                t = entries[-1][0]
+            entries.append((t, i, f"e{i}"))
+        cal = CalendarQueue(width, resize_threshold=threshold)
+        heap = []
+        for e in entries:
+            cal.push(e)
+            heapq.heappush(heap, e)
+        got = [cal.pop() for _ in range(len(entries))]
+        want = [heapq.heappop(heap) for _ in range(len(entries))]
+        assert got == want
+        assert len(cal) == 0
+
+    @given(
+        rounds=st.lists(
+            st.tuples(st.lists(st.floats(0.0, 0.05, allow_nan=False),
+                               min_size=0, max_size=8),
+                      st.integers(0, 8)),
+            min_size=1, max_size=30),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_interleaved_monotonic_matches_heapq(self, rounds):
+        """The fabric's access pattern: pushes land at-or-after the last
+        popped time (the clock is monotonic), interleaved with drains."""
+        import heapq
+
+        from repro.core import CalendarQueue
+
+        cal = CalendarQueue(1e-3)
+        heap = []
+        now, seq = 0.0, 0
+        for deltas, pops in rounds:
+            for d in deltas:
+                e = (now + d, seq, seq)
+                seq += 1
+                cal.push(e)
+                heapq.heappush(heap, e)
+            for _ in range(pops):
+                if not heap:
+                    break
+                want = heapq.heappop(heap)
+                assert cal.pop() == want
+                now = want[0]
+        while heap:
+            assert cal.pop() == heapq.heappop(heap)

@@ -1,0 +1,185 @@
+"""Batched production-stream serving mode + streaming percentile sketches.
+
+`ServingSimulator(mode="batched")` advances whole request phases per
+virtual-clock tick over the struct-of-arrays `RequestTable`; percentiles
+come from P^2 sketches so `ServeSimConfig.log_requests` can default off at
+production scale (the unbounded per-request log was the PR-9 bugfix).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FabricSpec, TentEngine
+from repro.serving import ServeSimConfig, ServingSimulator, from_table2
+from repro.serving.serve_sim import LOG_AUTO_LIMIT, PH_DONE, RequestTable
+from repro.serving.sketch import (EXACT_THRESHOLD, P2Quantile,
+                                  PercentileSketch)
+
+
+def _cfg(**kw):
+    """A small, fast stream: enough requests to exercise admission, cohort
+    promotion, prefill chunking, and decode, little enough byte volume that
+    the whole run is sub-second."""
+    base = dict(
+        mode="batched", concurrency=64, input_tokens=64, output_tokens=4,
+        chunk_tokens=64, stream_requests=2_500, arrival_rate=2_000.0,
+        zipf_alpha=1.1, traffic_groups=32, prefix_frac=0.5,
+        stream_kv_bytes_per_token=200, resident_s=0.25, tick_s=0.01,
+        gpu_node=0, store_node=1, seed=5)
+    base.update(kw)
+    return ServeSimConfig(**base)
+
+
+def _run(cfg):
+    sim = ServingSimulator(
+        TentEngine(FabricSpec()), from_table2(), hicache=None, sim_cfg=cfg)
+    return sim, sim.run()
+
+
+class TestBatchedStream:
+    def test_conserves_requests(self):
+        sim, st = _run(_cfg())
+        assert st.requests == 2_500
+        tb = sim._last_table
+        assert tb.size == 2_500
+        assert np.all(tb.phase[:tb.size] == PH_DONE)
+        assert np.all(tb.finish[:tb.size] >= tb.arrival[:tb.size])
+        assert st.makespan >= float(tb.finish[:tb.size].max()) - 1e-9
+
+    def test_deterministic_across_fresh_engines(self):
+        _, a = _run(_cfg())
+        _, b = _run(_cfg())
+        for f in ("makespan", "input_throughput", "avg_ttft", "p50_ttft",
+                  "p90_ttft", "p99_ttft", "avg_tpot", "p99_tpot",
+                  "bytes_promoted", "requests", "serialized_seconds"):
+            assert getattr(a, f) == getattr(b, f), f
+
+    def test_seed_changes_stream(self):
+        _, a = _run(_cfg(seed=5))
+        _, b = _run(_cfg(seed=6))
+        assert a.makespan != b.makespan
+
+    def test_ttft_positive_and_ordered(self):
+        _, st = _run(_cfg())
+        assert 0 < st.p50_ttft <= st.p90_ttft <= st.p99_ttft
+        assert st.avg_tpot > 0
+        assert st.bytes_promoted > 0
+
+    def test_concurrency_cap_binds(self):
+        """A tighter admission cap must not lose requests; queueing happens
+        before admission, so (TTFT being admission->first-token, same as the
+        async mode's fetch+prefill) the cost surfaces as a longer makespan
+        and lower input throughput, not as TTFT."""
+        _, wide = _run(_cfg())
+        _, narrow = _run(_cfg(concurrency=8))
+        assert narrow.requests == wide.requests == 2_500
+        assert narrow.makespan > wide.makespan
+        assert narrow.input_throughput < wide.input_throughput
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ServeSimConfig(mode="batched")  # needs stream_requests
+        with pytest.raises(ValueError):
+            ServeSimConfig(mode="warp-drive")
+
+
+class TestLogGating:
+    """The PR-9 bugfix: the per-request log no longer grows unboundedly at
+    production scale — auto-off above LOG_AUTO_LIMIT, and every percentile
+    path works without it."""
+
+    def test_auto_threshold(self):
+        cfg = _cfg()
+        assert dataclasses.replace(
+            cfg, stream_requests=LOG_AUTO_LIMIT - 1).keep_log()
+        assert not dataclasses.replace(
+            cfg, stream_requests=LOG_AUTO_LIMIT).keep_log()
+        # explicit settings override the auto rule in both directions
+        assert dataclasses.replace(
+            cfg, stream_requests=LOG_AUTO_LIMIT * 10,
+            log_requests=True).keep_log()
+        assert not dataclasses.replace(cfg, log_requests=False).keep_log()
+
+    def test_small_stream_logs_by_default(self):
+        _, st = _run(_cfg())
+        assert len(st.request_log) == 2_500
+
+    def test_log_off_percentiles_still_work(self):
+        _, logged = _run(_cfg())
+        _, bare = _run(_cfg(log_requests=False))
+        assert bare.request_log == []
+        assert bare.requests == logged.requests
+        assert bare.makespan == logged.makespan
+        assert bare.bytes_promoted == logged.bytes_promoted
+        # same stream, so the sketch path must land near the exact path
+        # (exact below EXACT_THRESHOLD; P^2 beyond — 2500 > threshold)
+        for f in ("p50_ttft", "p90_ttft", "p99_ttft"):
+            assert getattr(bare, f) == pytest.approx(
+                getattr(logged, f), rel=0.15), f
+        assert bare.avg_ttft == pytest.approx(logged.avg_ttft, rel=1e-9)
+
+
+class TestPercentileSketch:
+    def test_exact_below_threshold(self):
+        rng = np.random.default_rng(0)
+        xs = rng.lognormal(0.0, 1.0, size=EXACT_THRESHOLD - 50)
+        sk = PercentileSketch()
+        for x in xs:
+            sk.add(float(x))
+        for q in (50, 90, 99):
+            assert sk.percentile(q) == pytest.approx(
+                float(np.percentile(xs, q)), rel=1e-12)
+        assert sk.count == xs.size
+        assert sk.max == pytest.approx(xs.max())
+        assert sk.mean == pytest.approx(xs.mean())
+
+    @pytest.mark.parametrize("dist,kw", [
+        ("lognormal", dict(mean=0.0, sigma=1.0)),
+        ("exponential", dict(scale=3.0)),
+        ("uniform", dict(low=0.0, high=10.0)),
+    ])
+    def test_p2_tracks_numpy_at_scale(self, dist, kw):
+        rng = np.random.default_rng(17)
+        xs = getattr(rng, dist)(size=50_000, **kw)
+        sk = PercentileSketch()
+        for x in xs:
+            sk.add(float(x))
+        for q, tol in ((50, 0.05), (90, 0.05), (99, 0.10)):
+            assert sk.percentile(q) == pytest.approx(
+                float(np.percentile(xs, q)), rel=tol), f"P{q} on {dist}"
+
+    def test_untracked_quantile_raises_after_buffer_drop(self):
+        sk = PercentileSketch()
+        for i in range(EXACT_THRESHOLD + 10):
+            sk.add(float(i))
+        with pytest.raises(ValueError):
+            sk.percentile(75)
+
+    def test_empty_sketch(self):
+        sk = PercentileSketch()
+        assert sk.percentile(99) == 0.0
+        assert sk.mean == 0.0
+
+    def test_p2_constant_stream(self):
+        p2 = P2Quantile(0.9)
+        for _ in range(10_000):
+            p2.add(4.25)
+        assert p2.value() == pytest.approx(4.25)
+
+
+class TestRequestTable:
+    def test_columns_are_contiguous_and_typed(self):
+        tb = RequestTable(128)
+        assert tb.phase.dtype == np.int8
+        assert tb.arrival.dtype == np.float64
+        assert tb.input_tokens.dtype == np.int64
+        assert tb.arrival.flags["C_CONTIGUOUS"]
+
+    def test_view_writes_hit_columns(self):
+        tb = RequestTable(4)
+        req = tb.create(client=7, turn=2)
+        req.ttft = 1.5
+        assert tb.ttft[req.slot] == 1.5
+        assert tb.client[req.slot] == 7
+        assert tb.size == 1

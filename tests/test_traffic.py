@@ -1,0 +1,128 @@
+"""Seeded traffic generation: determinism + residency-model properties.
+
+`repro.scenarios.traffic` is the single source of arrival streams for the
+`serving_production_stream` scenario, `benchmarks/serving_scale.py`, the
+closed-loop serving bench, and the jitted sweep lowering — so every
+consumer's reproducibility rests on these pins: the same `TrafficSpec`
+must generate bit-identical arrays, and `promotion_bytes` must implement
+exactly the group-residency model the batched stepper assumes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.scenarios.traffic import (TrafficSpec, conversation_tokens,
+                                     promotion_bytes)
+
+
+def _spec(**kw):
+    base = dict(requests=2_000, arrival_rate=200.0, zipf_alpha=1.1,
+                groups=64, input_tokens=512, output_tokens=32, seed=42)
+    base.update(kw)
+    return TrafficSpec(**base)
+
+
+class TestDeterminism:
+    def test_same_seed_identical_arrays(self):
+        a, b = _spec().generate(), _spec().generate()
+        for f in ("arrival", "group", "input_tokens", "output_tokens"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+
+    def test_different_seed_different_stream(self):
+        a = _spec(seed=1).generate()
+        b = _spec(seed=2).generate()
+        assert not np.array_equal(a.arrival, b.arrival)
+
+    def test_promotion_bytes_deterministic(self):
+        s = _spec().generate()
+        kw = dict(prefix_frac=0.9, kv_bytes_per_token=40_000, resident_s=2.0)
+        np.testing.assert_array_equal(promotion_bytes(s, **kw),
+                                      promotion_bytes(s, **kw))
+
+    def test_conversation_tokens_deterministic(self):
+        a = conversation_tokens(8, 4, 128, seed=3)
+        b = conversation_tokens(8, 4, 128, seed=3)
+        assert a == b
+        assert len(a) == 8 and all(len(v) == 4 * 128 for v in a.values())
+
+    def test_spec_round_trips_through_dict(self):
+        spec = _spec()
+        assert TrafficSpec.from_dict(dataclasses.asdict(spec)) == spec
+
+
+class TestStreamShape:
+    def test_arrivals_sorted_and_positive(self):
+        s = _spec().generate()
+        assert np.all(np.diff(s.arrival) >= 0)
+        assert s.arrival[0] > 0
+        # mean inter-arrival ~ 1/rate (Poisson process, generous tolerance)
+        assert s.arrival[-1] / len(s) == pytest.approx(1 / 200.0, rel=0.25)
+
+    def test_zipf_head_dominates(self):
+        s = _spec(requests=20_000, groups=128, zipf_alpha=1.2).generate()
+        counts = np.bincount(s.group, minlength=128)
+        # rank-1 group beats the whole tail half under any real skew
+        assert counts[0] > counts[64:].sum()
+        assert counts.sum() == 20_000
+
+    def test_input_tokens_floor(self):
+        s = _spec(input_tokens=16, input_jitter=2.0).generate()
+        assert s.input_tokens.min() >= 16
+
+    def test_empty_stream(self):
+        s = _spec(requests=0, arrival_rate=0.0).generate()
+        assert len(s) == 0
+        assert promotion_bytes(
+            s, prefix_frac=0.5, kv_bytes_per_token=1, resident_s=1.0).size == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            _spec(requests=-1)
+        with pytest.raises(ValueError):
+            _spec(arrival_rate=0.0)
+        with pytest.raises(ValueError):
+            _spec(zipf_alpha=0.0)
+        with pytest.raises(ValueError):
+            _spec(groups=0)
+
+
+class TestPromotionModel:
+    def test_first_touch_always_promotes(self):
+        s = _spec().generate()
+        promo = promotion_bytes(s, prefix_frac=0.9, kv_bytes_per_token=1_000,
+                                resident_s=1e9)
+        # with infinite residency each group pays exactly once
+        promoted_groups = np.unique(s.group[promo > 0])
+        np.testing.assert_array_equal(promoted_groups, np.unique(s.group))
+        assert int((promo > 0).sum()) == np.unique(s.group).size
+
+    def test_zero_residency_promotes_everything(self):
+        s = _spec().generate()
+        promo = promotion_bytes(s, prefix_frac=1.0, kv_bytes_per_token=7,
+                                resident_s=0.0)
+        # gaps are continuous-positive, so every request re-promotes
+        expect = s.input_tokens * 7
+        np.testing.assert_array_equal(promo, expect)
+
+    def test_residency_matches_reference_loop(self):
+        """Vectorized lexsort model vs the obvious per-group dict loop."""
+        s = _spec(requests=3_000, groups=16, seed=9).generate()
+        promo = promotion_bytes(s, prefix_frac=0.5, kv_bytes_per_token=100,
+                                resident_s=0.75)
+        last_seen: dict = {}
+        for i in range(len(s)):
+            g, t = int(s.group[i]), float(s.arrival[i])
+            cold = g not in last_seen or (t - last_seen[g]) > 0.75
+            last_seen[g] = t
+            want = (int(np.rint(s.input_tokens[i] * 0.5)) * 100) if cold else 0
+            assert promo[i] == want, f"request {i}"
+
+    def test_bytes_scale_with_prefix_frac(self):
+        s = _spec().generate()
+        lo = promotion_bytes(s, prefix_frac=0.25, kv_bytes_per_token=1_000,
+                             resident_s=2.0)
+        hi = promotion_bytes(s, prefix_frac=1.0, kv_bytes_per_token=1_000,
+                             resident_s=2.0)
+        assert hi.sum() > lo.sum()
+        np.testing.assert_array_equal(hi > 0, lo > 0)  # same cold set
