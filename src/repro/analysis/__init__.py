@@ -1,0 +1,10 @@
+"""tentlint: repo-native static analysis + runtime sanitizer.
+
+This package only eagerly exposes the `@hot_path` marker (imported by hot
+engine modules, so it must stay dependency-free and instant); the linter
+(`repro.analysis.lint`), rule set (`repro.analysis.rules`), and runtime
+sanitizer (`repro.analysis.sanitize`) are imported on demand.
+"""
+from .hotpath import hot_path, is_hot_path
+
+__all__ = ["hot_path", "is_hot_path"]

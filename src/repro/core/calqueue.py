@@ -39,6 +39,7 @@ degenerate one-bucket case the structure *is* a binary heap.
 from __future__ import annotations
 
 import heapq
+from ..analysis import hot_path
 from typing import List, Optional, Tuple
 
 __all__ = ["CalendarQueue", "DEFAULT_WIDTH", "RESIZE_THRESHOLD"]
@@ -86,6 +87,8 @@ class CalendarQueue:
     def __bool__(self) -> bool:
         return self._len > 0
 
+    @hot_path
+
     def push(self, entry: Entry) -> None:
         bid = int(entry[0] / self.width)
         cur_id = self.cur_id
@@ -101,6 +104,8 @@ class CalendarQueue:
             else:
                 lst.append(entry)
         self._len += 1
+
+    @hot_path
 
     def pop(self) -> Entry:
         if not self.cur:

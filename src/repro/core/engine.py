@@ -16,6 +16,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..obs import events as OBS
+from ..analysis import hot_path
 from .fabric import Fabric, FabricConfig
 from .plan import Orchestrator, Stage, StageCandidates, TransportPlan, build_stage_candidates
 from .resilience import HealthConfig, HealthMonitor
@@ -430,6 +431,7 @@ class TentEngine:
         )
 
     # ------------------------------------------------------------- dispatch
+    @hot_path
     def _dispatch(self) -> None:
         """Drain the pending ring into the fabric, a wave at a time.
 
@@ -828,6 +830,7 @@ class TentEngine:
             self._issue(sl, tcb, retry_exclude=(inf.path.local.link_id,))
 
     # ------------------------------------------------- batched completion
+    @hot_path
     def _on_wire_done_many(self, ops, now: float) -> None:
         """Batched completion drain (`EngineConfig.wave_complete`): the
         fabric delivers every tagged completion landing at one virtual
@@ -921,6 +924,8 @@ class TentEngine:
                 self._drain_success_run(run, now)
             i = j
 
+    @hot_path
+
     def _drain_success_run(self, infs: List[_InflightSlice], now: float) -> None:
         """Vectorized drain of one run of successful final-hop completions.
         The telemetry columns were pre-packed per slice at post time
@@ -971,6 +976,8 @@ class TentEngine:
         for inf in infs:
             finish(inf.sl, inf.tcb, now)
         self._dispatch()
+
+    @hot_path
 
     def _drain_failures(self, ops, i: int, now: float) -> int:
         """Batched retry/requeue handler: process the run of consecutive

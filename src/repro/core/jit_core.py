@@ -44,6 +44,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from .fabric import FAR_WINDOW
+from ..analysis import hot_path
 from .scheduler import tent_choose_wave_padded_jnp, tent_on_complete_many_jnp
 
 __all__ = [
@@ -136,6 +137,7 @@ class EngineJitCore:
             self.min_batch = JIT_MIN
 
     # -- wave chooser --------------------------------------------------------
+    @hot_path
     def choose_wave(self, sc, lengths):
         """Jitted twin of `TentPolicy.choose_wave`: same gathers, same
         write-backs, padded to shape buckets. Returns int64
@@ -190,6 +192,7 @@ class EngineJitCore:
         return choices, queued_at
 
     # -- completion drain ----------------------------------------------------
+    @hot_path
     def on_complete_many(self, slots, lengths, queued_at, t_obs) -> None:
         """Jitted twin of `TelemetryStore.on_complete_many`: full state
         vectors travel through the telemetry transport hooks; batch padding

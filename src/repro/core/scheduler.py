@@ -381,6 +381,25 @@ def tent_choose_wave(queued, global_local, global_remote, bandwidth, beta0,
 # window can round differently on exact ties.
 # ---------------------------------------------------------------------------
 
+# Kernel-twin registry for the `twin-drift` lint rule: every public *_jnp
+# kernel maps to its numpy twin; a [target, reason] entry waives the
+# parameter-name match where the two sides expose deliberately different
+# APIs (object/store views vs flat arrays).
+__numpy_twins__ = {
+    "tent_scores_jnp": ["TentPolicy.scores",
+                        "candidate-object API vs flat array inputs"],
+    "tent_choose_jnp": ["TentPolicy.choose",
+                        "candidate-object API vs flat array inputs"],
+    "tent_choose_wave_jnp": "tent_choose_wave",
+    "tent_on_complete_many_jnp": [
+        "TelemetryStore.on_complete_many",
+        "carries EWMA state as arrays; the twin reads the store's views"],
+    "tent_choose_wave_padded_jnp": [
+        "tent_choose_wave",
+        "padded fixed-shape variant adds the `valid` mask"],
+}
+
+
 def tent_scores_jnp(queued, bandwidth, beta0, beta1, penalty, length):
     """score_d = P_tier(d) * (beta0_d + beta1_d * (A_d + L) / B_d)."""
     import jax.numpy as jnp

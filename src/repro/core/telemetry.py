@@ -34,6 +34,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from .topology import LinkDesc
+from ..analysis import hot_path
 
 DEFAULT_BETA0 = 0.0
 DEFAULT_BETA1 = 1.0
@@ -343,6 +344,7 @@ class TelemetryStore:
                 self._published[lid] = q
 
     # -- batched completion feedback (the drain half of the closed loop) -----
+    @hot_path
     def on_complete_many(self, slots, lengths, queued_at_schedule, t_obs) -> None:
         """Vectorized twin of `LinkTelemetry.on_complete` over one completion
         batch, **exactly** (bit-for-bit) equal to looping `on_complete` in
@@ -383,6 +385,8 @@ class TelemetryStore:
             sel = order[rank == r]
             self._complete_round(
                 slots[sel], lengths[sel], queued_at[sel], t_obs[sel])
+
+    @hot_path
 
     def _complete_round(self, idx, lengths, queued_at, t_obs) -> None:
         """One round of the batched EWMA update: `idx` holds *distinct* store

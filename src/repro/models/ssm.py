@@ -27,6 +27,24 @@ def segsum(a: jax.Array) -> jax.Array:
     return jnp.where(mask, out, -jnp.inf)
 
 
+def _interchunk_step(carry, inp):
+    """Inter-chunk SSD recurrence: state_{c+1} = state_c * decay_c + states_c.
+
+    Inside the compiled scan body, `prev * dec + st_c` gets contracted into
+    a single-rounded fma, so the jitted recurrence drifts one ulp from an
+    unfused (numpy-style) evaluation. `one` is traced and always exactly
+    1.0 (dec = exp(...) > 0); dividing the product by it is exact but makes
+    the add's operand a division result, which is not a contraction
+    candidate (same guard as scheduler's EWMA scan, PR 8).
+    """
+    st_c, dec_c = inp  # (b,h,p,n), (b,h)
+    prev = carry
+    dec = dec_c[..., None, None].astype(carry.dtype)
+    one = jnp.where(dec >= 0, 1.0, 2.0)
+    new = (prev * dec) / one + st_c
+    return new, prev
+
+
 def ssd_chunked(
     x: jax.Array,  # (b, s, h, p) — pre-multiplied by dt
     a: jax.Array,  # (b, s, h)    — dt * A (negative log-decay increments)
@@ -72,16 +90,11 @@ def ssd_chunked(
     if initial_state is None:
         initial_state = jnp.zeros((b, h, p, n), dtype=x.dtype)
 
-    def scan_fn(carry, inp):
-        st_c, dec_c = inp  # (b,h,p,n), (b,h)
-        prev = carry
-        new = prev * dec_c[..., None, None].astype(carry.dtype) + st_c
-        return new, prev
-
     states_t = states.transpose(1, 0, 2, 3, 4)  # (c,b,h,p,n)
     decay_t = chunk_decay.transpose(2, 0, 1)  # (c,b,h)
     final_state, states_prev = jax.lax.scan(
-        scan_fn, initial_state.astype(jnp.float32), (states_t.astype(jnp.float32), decay_t)
+        _interchunk_step, initial_state.astype(jnp.float32),
+        (states_t.astype(jnp.float32), decay_t)
     )
     states_prev = states_prev.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
     # 4. state -> output contribution

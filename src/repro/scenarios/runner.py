@@ -207,38 +207,46 @@ class ScenarioRunner:
         never changes the resulting report (parity-pinned in
         tests/test_obs.py). All three workload kinds surface their engine/
         cluster counters through one `MetricsRegistry` collection, so
-        `ScenarioReport.extra` carries a uniform counter surface."""
+        `ScenarioReport.extra` carries a uniform counter surface.
+
+        The whole body runs under `maybe_sanitized()`: with REPRO_SANITIZE=1
+        any engine-side wall-clock or global-RNG call raises (the dynamic
+        side of the tentlint no-wall-clock/no-global-rng rules); with the
+        env var unset this is a nullcontext and costs nothing."""
+        from ..analysis.sanitize import maybe_sanitized
+
         wl = self.spec.workload
         reg = MetricsRegistry()
-        if isinstance(wl, ClusterWorkload):
-            cluster = self.build_cluster(policy, recorder=recorder)
-            base = policy.partition("+")[0]
-            churn = tuple(f for f in self.spec.faults if f.is_churn)
-            outcome, ignore = run_cluster_workload(
-                cluster, wl, churn, join_policy=base)
-            audit = cluster.audit(ignore=ignore)["total"]
-            counters = cluster.counters()
-            cluster.register_metrics(reg)
+        with maybe_sanitized():
+            if isinstance(wl, ClusterWorkload):
+                cluster = self.build_cluster(policy, recorder=recorder)
+                base = policy.partition("+")[0]
+                churn = tuple(f for f in self.spec.faults if f.is_churn)
+                outcome, ignore = run_cluster_workload(
+                    cluster, wl, churn, join_policy=base)
+                audit = cluster.audit(ignore=ignore)["total"]
+                counters = cluster.counters()
+                cluster.register_metrics(reg)
+                return self._reduce(
+                    policy, fabric=cluster.fabric, audit=audit,
+                    counters={k: counters[k] for k in
+                              ("retries", "exclusions", "readmissions",
+                               "substitutions")},
+                    outcome=outcome, extra=reg.collect())
+            engine, tenant_batches = self.build_engine(policy, recorder=recorder)
+            outcome = run_workload(engine, wl)
+            engine.register_metrics(reg)
             return self._reduce(
-                policy, fabric=cluster.fabric, audit=audit,
-                counters={k: counters[k] for k in
-                          ("retries", "exclusions", "readmissions",
-                           "substitutions")},
-                outcome=outcome, extra=reg.collect())
-        engine, tenant_batches = self.build_engine(policy, recorder=recorder)
-        outcome = run_workload(engine, wl)
-        engine.register_metrics(reg)
-        return self._reduce(
-            policy, fabric=engine.fabric,
-            audit=engine.audit(ignore=tenant_batches),
-            counters={
-                "retries": engine.slices_retried,
-                "exclusions": engine.health.exclusions,
-                "readmissions": engine.health.readmissions,
-                "substitutions": engine.backend_substitutions,
-            },
-            outcome=outcome,
-            extra=reg.collect())
+                policy, fabric=engine.fabric,
+                audit=engine.audit(ignore=tenant_batches),
+                counters={
+                    "retries": engine.slices_retried,
+                    "exclusions": engine.health.exclusions,
+                    "readmissions": engine.health.readmissions,
+                    "substitutions": engine.backend_substitutions,
+                },
+                outcome=outcome,
+                extra=reg.collect())
 
     def run(self) -> ScenarioReport:
         reports = {p: self.run_policy(p) for p in self.spec.policies}

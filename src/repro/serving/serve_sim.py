@@ -49,6 +49,7 @@ from ..obs import events as OBS
 from .checkpoint_engine import CheckpointEngine
 from .hicache import HiCache
 from .perf_model import PerfModel
+from ..analysis import hot_path
 from .sketch import PercentileSketch
 
 _EVENT_BUDGET = 60_000_000
@@ -642,6 +643,7 @@ class ServingSimulator:
         )
 
     # ------------------------------------------------------------- batched
+    @hot_path
     def _run_batched(self) -> ServeStats:
         """Production-stream stepper: whole phases advance per tick over the
         SoA `RequestTable`; the only per-request Python work is the metric
@@ -741,7 +743,8 @@ class ServingSimulator:
                             b, [(src.segment_id, 0, dst.segment_id, 0,
                                  nbytes)])
                         self.engine.on_batch_done(
-                            b, lambda res, rows=rows[cold]: cohort_done(
+                            b,  # one closure per cohort batch, not per item
+                            lambda res, rows=rows[cold]: cohort_done(  # tentlint: disable=hot-path-alloc
                                 res, rows))
 
             # -- prefill: FIFO share of the tick's token budget -------------
@@ -789,7 +792,8 @@ class ServingSimulator:
             else:
                 stalled += 1
                 if stalled > stall_limit:
-                    hist = {p: int(np.sum(phase == p)) for p in
+                    # raise-path only: building the error message
+                    hist = {p: int(np.sum(phase == p)) for p in  # tentlint: disable=hot-path-alloc
                             (PH_PENDING, PH_FETCH, PH_PREFILL, PH_DECODE)}
                     raise RuntimeError(
                         f"batched serving stream livelocked: "

@@ -1,0 +1,24 @@
+"""Deliberate fma-hazard violations: unguarded products feeding adds
+inside compiled scan/jit bodies."""
+import jax
+import jax.numpy as jnp
+
+
+def ewma_scan(xs, alpha):
+    def step(carry, x):
+        new = alpha * x + (1 - alpha) * carry  # VIOLATION x2: both products
+        return new, new
+
+    return jax.lax.scan(step, jnp.zeros(()), xs)
+
+
+@jax.jit
+def blend(u, v, w):
+    return u * v + w  # VIOLATION: jitted kernel, direct mult into add
+
+
+def index_math(xs):
+    def step(carry, x):
+        return carry + 4 * 8, x  # clean: integer-constant product
+
+    return jax.lax.scan(step, 0, xs)

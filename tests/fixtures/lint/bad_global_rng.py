@@ -1,0 +1,19 @@
+"""Deliberate no-global-rng violations."""
+import random
+import time
+
+import numpy as np
+
+
+def draw_global():
+    a = np.random.rand(4)  # VIOLATION: numpy global RNG
+    np.random.seed(0)  # VIOLATION: seeding the global state
+    b = random.random()  # VIOLATION: stdlib global RNG
+    return a, b
+
+
+def bad_seeds(obj):
+    g1 = np.random.default_rng(id(obj))  # VIOLATION: id() seed
+    g2 = np.random.default_rng(hash("x") % 100)  # VIOLATION: hash() seed
+    g3 = np.random.default_rng(int(time.time()))  # VIOLATION: wall seed
+    return g1, g2, g3

@@ -1,0 +1,22 @@
+"""Deliberate hot-path-alloc violations inside @hot_path bodies."""
+import functools
+
+from repro.analysis import hot_path
+
+
+@hot_path
+def drain(ops, registry, cb):
+    for op in ops:
+        registry.defer(lambda: cb(op))  # VIOLATION: per-iteration lambda
+        handler = functools.partial(cb, op)  # VIOLATION: partial wrapper
+        sizes = [o.nbytes for o in op.parts]  # VIOLATION: comp in loop
+        handler(sizes)
+
+
+@hot_path
+def nested_def_in_loop(items):
+    while items:
+        def helper(x):  # VIOLATION: nested def per iteration
+            return x + 1
+
+        items = items[:-1] and helper(items)

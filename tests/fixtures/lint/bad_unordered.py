@@ -1,0 +1,19 @@
+"""Deliberate unordered-iter violations: set iteration on engine paths."""
+
+
+def report_rails(excluded_ids):
+    rails = {1, 2, 3}
+    out = []
+    for r in rails:  # VIOLATION: set-literal local iterated
+        out.append(r)
+    for e in set(excluded_ids):  # VIOLATION: set() call iterated
+        out.append(e)
+    return out
+
+
+def merge(a, b):
+    return [x for x in a | {0}]  # VIOLATION: set-union comprehension
+
+
+def materialize(ids):
+    return list(frozenset(ids))  # VIOLATION: list() over a frozenset

@@ -1,0 +1,17 @@
+"""Deliberate no-wall-clock violations (linted by tests/test_analysis.py
+with this directory treated as engine source; never walked by the default
+tree scan)."""
+import time
+from datetime import datetime
+from time import perf_counter as pc
+
+
+def stamp_now():
+    t0 = time.time()  # VIOLATION: wall clock in engine source
+    t1 = pc()  # VIOLATION: aliased from-import of perf_counter
+    when = datetime.now()  # VIOLATION: datetime wall clock
+    return t0, t1, when
+
+
+def sleepy():
+    time.sleep(0.1)  # VIOLATION: real sleeping on a simulated path

@@ -1,0 +1,22 @@
+"""Known-clean twin of bad_fma: every product routed through a division
+(the PR 8 uncontractable-divide guard)."""
+import jax
+import jax.numpy as jnp
+
+
+def ewma_scan(xs, alpha):
+    def step(carry, x):
+        one = jnp.where(x == x, 1.0, 2.0)  # traced, always exactly 1.0
+        new = (alpha * x) / one + ((1 - alpha) * carry) / one
+        return new, new
+
+    return jax.lax.scan(step, jnp.zeros(()), xs)
+
+
+@jax.jit
+def blend(u, inv_v, w):
+    return u / inv_v + w  # trailing division: not a contraction candidate
+
+
+def eager_blend(u, v, w):
+    return u * v + w  # clean: not inside a scan/jit body

@@ -1,0 +1,15 @@
+"""Known-clean twin of bad_global_rng: seeded generators only."""
+import random
+
+import numpy as np
+
+
+def draw_seeded(seed: int):
+    rng = np.random.default_rng(seed)
+    pyr = random.Random(seed)
+    return rng.random(4), pyr.random()
+
+
+def derive(seed: int, lane: int):
+    ss = np.random.SeedSequence(seed)
+    return np.random.default_rng(ss.spawn(lane + 1)[lane])

@@ -1,0 +1,16 @@
+"""Known-clean twin of bad_hotpath: hoisted setup, no per-iteration churn."""
+from repro.analysis import hot_path
+
+
+@hot_path
+def drain(ops, registry, cb):
+    batch = [None] * len(ops)  # one-time setup before the loop: fine
+    for i, op in enumerate(ops):
+        batch[i] = op.nbytes  # writes into a preallocated buffer
+        registry.defer_many(batch)
+    return batch
+
+
+def cold_path(ops, cb):
+    # untagged: the alloc discipline does not apply here
+    return [lambda: cb(op) for op in ops]

@@ -1,0 +1,19 @@
+"""Known-clean twin of bad_unordered: sorted wrappers and membership."""
+
+
+def report_rails(excluded_ids):
+    out = []
+    for r in sorted({1, 2, 3}):  # sorted() pins the order
+        out.append(r)
+    for e in sorted(set(excluded_ids)):
+        out.append(e)
+    return out
+
+
+def membership(ids, probe):
+    seen = set(ids)
+    return probe in seen  # membership test, not iteration
+
+
+def reduce_ok(ids):
+    return len(set(ids)), min(set(ids) | {0})  # order-free reductions

@@ -1,0 +1,9 @@
+"""Known-clean twin of bad_wall_clock: virtual time only."""
+
+
+def stamp_now(fabric):
+    return fabric.now  # virtual clock: the only time source allowed
+
+
+def elapsed(fabric, t0):
+    return fabric.now - t0

@@ -1,0 +1,16 @@
+"""Pragma exercise file: every violation here carries a suppression."""
+# tentlint: disable-file=no-global-rng
+import random
+import time
+
+
+def stamped():
+    return time.time()  # tentlint: disable=no-wall-clock
+
+
+def drawn():
+    return random.random()  # covered by the disable-file pragma above
+
+
+def still_bad():
+    return time.perf_counter()  # unsuppressed: must still be flagged

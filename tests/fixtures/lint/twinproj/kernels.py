@@ -1,0 +1,43 @@
+"""Twin-drift fixture mini-project: one clean kernel pair, one signature
+drift, one orphan, one waived pair, one untested pair."""
+import numpy as np
+
+__numpy_twins__ = {
+    "waived_jnp": ["good_kernel", "array-batch API vs scalar twin"],
+}
+
+
+def good_kernel(x, scale):
+    return np.asarray(x) * scale
+
+
+def good_kernel_jnp(x, scale):  # clean: twin + matching params + test
+    return x * scale
+
+
+def drifted(x, beta):
+    return np.asarray(x) + beta
+
+
+def drifted_jnp(x, alpha):  # VIOLATION: param names drifted (alpha vs beta)
+    return x + alpha
+
+
+def orphan_jnp(x):  # VIOLATION: no numpy twin anywhere
+    return x
+
+
+def waived_jnp(data, n):  # clean: registered waiver skips signature check
+    return data[:n]
+
+
+def untested(x):
+    return np.abs(x)
+
+
+def untested_jnp(x):  # VIOLATION: twin exists but no parity test names both
+    return abs(x)
+
+
+def _private_jnp(x):  # underscore-private: outside the twin contract
+    return x

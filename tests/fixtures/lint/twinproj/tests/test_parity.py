@@ -1,0 +1,16 @@
+"""Parity tests for the twinproj fixture kernels (textual references are
+what the twin-drift rule checks for)."""
+from ..kernels import drifted, drifted_jnp, good_kernel, good_kernel_jnp, waived_jnp
+
+
+def test_good_kernel_parity():
+    assert good_kernel_jnp(2.0, 3.0) == good_kernel(2.0, 3.0)
+
+
+def test_drifted_parity():
+    assert drifted_jnp(1.0, 0.5) == drifted(1.0, 0.5)
+
+
+def test_waived_matches_scalar_twin():
+    assert list(waived_jnp([1, 2, 3], 2)) == [
+        good_kernel(1, 1), good_kernel(2, 1)]

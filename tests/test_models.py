@@ -49,6 +49,29 @@ class TestSSD:
         np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, s:]), rtol=2e-3, atol=2e-3)
         np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), rtol=2e-3, atol=2e-3)
 
+    def test_interchunk_scan_jit_bitexact_vs_numpy(self):
+        """Regression for the inter-chunk scan's fma guard: the jitted
+        recurrence must reproduce an unfused numpy float32 evaluation
+        (separate IEEE rounding for the product and the add) bit-exactly.
+        Without the divide guard in `_interchunk_step`, XLA contracts
+        `prev * dec + st` in the compiled scan body into a single-rounded
+        fma and the states drift one ulp."""
+        from repro.models.ssm import _interchunk_step
+
+        rng = np.random.default_rng(11)
+        c, b, h, p, n = 16, 2, 3, 4, 5
+        states = rng.standard_normal((c, b, h, p, n)).astype(np.float32)
+        decay = np.exp(-rng.random((c, b, h))).astype(np.float32)
+        init = rng.standard_normal((b, h, p, n)).astype(np.float32)
+        jitted = jax.jit(lambda i, xs: jax.lax.scan(_interchunk_step, i, xs))
+        final, prevs = jitted(jnp.asarray(init),
+                              (jnp.asarray(states), jnp.asarray(decay)))
+        prev = init.copy()
+        for k in range(c):
+            np.testing.assert_array_equal(np.asarray(prevs[k]), prev)
+            prev = prev * decay[k][..., None, None] + states[k]
+        np.testing.assert_array_equal(np.asarray(final), prev)
+
 
 @pytest.mark.slow
 class TestMoE:

@@ -37,10 +37,12 @@ class TestMultiTenant:
         e1, e2, fabric = _two_engines(omega=0.0)
         n = 32 << 20
         pairs = []
-        for eng in (e1, e2):
+        for idx, eng in enumerate((e1, e2)):
             src = eng.register_segment(host_loc(0, 0), n)
             dst = eng.register_segment(host_loc(1, 0), n)
-            payload = np.random.default_rng(id(eng) % 97).integers(0, 256, n, np.uint8)
+            # seed from the tenant index, not id(eng): object identity
+            # changes run to run and would make the payloads irreproducible
+            payload = np.random.default_rng(97 + idx).integers(0, 256, n, np.uint8)
             src.write(0, payload)
             b = eng.allocate_batch()
             eng.submit_transfer(b, [(src.segment_id, 0, dst.segment_id, 0, n)])
@@ -52,6 +54,17 @@ class TestMultiTenant:
             res = eng.wait(b)
             assert res.ok
             np.testing.assert_array_equal(dst.read(0, n), payload)
+
+    def test_payloads_depend_only_on_tenant_index(self):
+        """Regression for the id(eng)-derived payload seed: payload bytes
+        must be a pure function of the tenant index so reruns (and fresh
+        engine objects) generate identical content."""
+        n = 1 << 16
+        a1 = np.random.default_rng(97 + 0).integers(0, 256, n, np.uint8)
+        a2 = np.random.default_rng(97 + 0).integers(0, 256, n, np.uint8)
+        b1 = np.random.default_rng(97 + 1).integers(0, 256, n, np.uint8)
+        np.testing.assert_array_equal(a1, a2)
+        assert not np.array_equal(a1, b1)
 
     def test_global_diffusion_biases_scores(self):
         """With omega > 0, tenant B's scheduler must see tenant A's queued

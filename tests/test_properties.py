@@ -120,6 +120,34 @@ class TestSchedulerInvariants:
         s_min = min(s_py)
         assert s_py[int(idx)] <= 1.05 * s_min * (1 + 1e-6)
 
+    @given(
+        queues=st.lists(st.integers(0, 1 << 28), min_size=2, max_size=8),
+        length=st.integers(1, 1 << 22),
+        tier=st.integers(1, 3),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_jnp_scores_bitexact_vs_policy_scores(self, queues, length, tier):
+        """tent_scores_jnp under x64 must reproduce TentPolicy.scores
+        bit-exactly (same operation order, same roundings)."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        from repro.core.scheduler import tent_scores_jnp
+        from repro.core.topology import DEFAULT_TIER_PENALTY
+
+        n = len(queues)
+        cands = [Candidate(_mk_tl(i, queued=q), tier) for i, q in enumerate(queues)]
+        s_py = TentPolicy().scores(cands, length)
+        pen = DEFAULT_TIER_PENALTY[tier]
+        with enable_x64():
+            s_jnp = tent_scores_jnp(
+                jnp.asarray(queues, jnp.float64),
+                jnp.full((n,), 25e9, jnp.float64),
+                jnp.zeros((n,), jnp.float64), jnp.ones((n,), jnp.float64),
+                jnp.full((n,), pen, jnp.float64), float(length),
+            )
+            np.testing.assert_array_equal(np.asarray(s_jnp), np.asarray(s_py))
+
 
 def _wave_state(draw_queues, tiers, excluded, beta0s, beta1s, global_load, weight):
     """Build one TelemetryStore + candidate list from hypothesis data. Every
